@@ -1,0 +1,83 @@
+"""Shared benchmark helpers: the paper's evaluation protocol.
+
+Protocol (paper §IV): every scheduling configuration runs under the
+optimized runtime; metrics are averaged over N seeded repetitions (the
+paper uses 50 runs; we default to 15 sim runs — the simulator is
+deterministic given a seed); the baseline is the fastest single device
+(GPU) running one packet.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+from typing import Dict, List, Sequence, Tuple
+
+from repro.configs.paper_suite import (BENCHES, SCHED_CONFIGS, BenchSpec,
+                                       sim_devices)
+from repro.core import metrics as M
+from repro.core.simulate import SimConfig, simulate, single_device_time
+
+N_RUNS = 15
+
+
+def run_bench_matrix(*, opt_init: bool = True, opt_buffers: bool = True,
+                     n_runs: int = N_RUNS) -> List[Dict]:
+    """One record per (bench, scheduler config): times + metrics."""
+    records = []
+    for bname, spec in BENCHES.items():
+        devs = sim_devices(spec)
+        base = SimConfig(opt_init=opt_init, opt_buffers=opt_buffers)
+        singles = [single_device_time(spec.total_work, spec.lws, d, base)
+                   for d in devs]
+        fastest = min(singles)
+        smax = M.s_max_from_times(singles)
+        for label, sched, kw in SCHED_CONFIGS:
+            ts, bals, bins = [], [], []
+            for seed in range(n_runs):
+                cfg = SimConfig(scheduler=sched, scheduler_kwargs=kw,
+                                opt_init=opt_init, opt_buffers=opt_buffers,
+                                seed=seed)
+                r = simulate(spec.total_work, spec.lws, devs, cfg)
+                ts.append(r.total_time)
+                bins.append(r.binary_time)
+                bals.append(M.balance(r))
+            t = sum(ts) / len(ts)
+            records.append({
+                "bench": bname,
+                "config": label,
+                "roi_time_s": t,
+                "binary_time_s": sum(bins) / len(bins),
+                "speedup": M.speedup(fastest, t),
+                "efficiency": M.efficiency(fastest, t, singles),
+                "balance": sum(bals) / len(bals),
+                "s_max": smax,
+                "fastest_single_s": fastest,
+            })
+    return records
+
+
+def geomean_by_config(records: Sequence[Dict], field: str) -> Dict[str, float]:
+    by = {}
+    for r in records:
+        by.setdefault(r["config"], []).append(r[field])
+    return {k: M.geomean(v) for k, v in by.items()}
+
+
+def print_table(records: Sequence[Dict], field: str, fmt: str = "{:.3f}"):
+    configs = [c for c, _, _ in SCHED_CONFIGS]
+    benches = list(BENCHES)
+    print(f"{'bench':12s}" + "".join(f"{c:>13s}" for c in configs))
+    for b in benches:
+        row = [next(r for r in records
+                    if r["bench"] == b and r["config"] == c)[field]
+               for c in configs]
+        print(f"{b:12s}" + "".join(f"{fmt.format(v):>13s}" for v in row))
+    gm = geomean_by_config(records, field)
+    print(f"{'geomean':12s}" + "".join(f"{fmt.format(gm[c]):>13s}"
+                                       for c in configs))
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

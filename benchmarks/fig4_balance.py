@@ -1,0 +1,32 @@
+"""Paper Fig. 4: load-balance metric (T_first_finisher / T_last_finisher)
+per scheduler.  HGuided should be near-best everywhere (paper: ~0.97
+optimized) thanks to the shrinking tail packets; Static suffers on
+irregular programs."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks import common
+
+
+def main() -> int:
+    t0 = time.time()
+    records = common.run_bench_matrix()
+    print("== Fig 4: balance ==")
+    common.print_table(records, "balance")
+    gm = common.geomean_by_config(records, "balance")
+    os.makedirs("artifacts/bench", exist_ok=True)
+    with open("artifacts/bench/fig4.json", "w") as f:
+        json.dump(records, f, indent=1)
+    hgo = gm["HGuided opt"]
+    ok = hgo >= 0.9 and hgo >= gm["Static"]
+    print(f"\nHGuided opt balance geomean: {hgo:.3f} (paper: 0.97)")
+    print(common.csv_line("fig4_balance_hguided_opt", (time.time()-t0)*1e6,
+                          f"balance={hgo:.3f};ok={ok}"))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

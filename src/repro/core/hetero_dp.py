@@ -1,0 +1,177 @@
+"""Heterogeneity-aware data-parallel training (the paper's co-execution as
+a first-class training-framework feature).
+
+Each training step is a co-execution of one global batch: the batch's row
+range is the work queue (1 work-group = ``lws`` rows = the minimum
+microbatch), device groups pull row-range packets HGuided-style in
+proportion to their EWMA-measured throughput, and gradients are combined
+weighted by the tokens each group actually processed.  Consequences, by
+construction:
+
+  * straggler mitigation — a slow/throttled group takes fewer packets and
+    everyone finishes the step together (the paper's balance ~= 1);
+  * fault tolerance — a group that dies mid-step has its in-flight packet
+    requeued; surviving groups absorb it; the step completes with the FULL
+    global batch (exactly-once semantics per row range);
+  * elastic scaling — groups can be added/removed between steps; powers
+    renormalize automatically (HGuidedOpt's online estimation);
+  * optional int8 error-feedback compression on the gradient combine
+    (the cross-pod hop at datacenter scale).
+
+On a real multi-pod deployment each DeviceGroup is a pod sub-slice and the
+combine is a weighted all-reduce over the ``pod`` axis; in this container
+groups are CPU executors (optionally throttled) and the combine is local.
+The DES twin (core/simulate.py + benchmarks/scale1000.py) runs the same
+scheduler logic at 1024-group scale.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.device import DeviceFailure, DeviceGroup
+from repro.core.scheduler import DeviceProfile, make_scheduler
+from repro.data.pipeline import SyntheticPipeline
+from repro.optim import adamw, compress as C
+from repro.optim.adamw import OptConfig, TrainState
+from repro.training.step import make_loss_fn
+
+
+@dataclass
+class StepReport:
+    loss: float
+    tokens: int
+    step_time_s: float
+    balance: float
+    packets: int
+    device_rows: Dict[str, int]
+    failures: int
+
+
+class HeteroDPTrainer:
+    def __init__(self, cfg: ModelConfig, opt: OptConfig, shape: ShapeConfig,
+                 devices: List[DeviceGroup], pipeline: SyntheticPipeline, *,
+                 scheduler: str = "hguided_opt", lws: int = 1,
+                 compress: bool = False):
+        self.cfg = cfg
+        self.opt = opt
+        self.shape = shape
+        self.devices = list(devices)
+        self.pipeline = pipeline
+        self.scheduler_name = scheduler
+        self.lws = lws
+        self.compress = compress
+        loss_fn = make_loss_fn(cfg)
+
+        def grad_fn(params, batch):
+            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                     batch)
+            return loss, g
+
+        self._grad = jax.jit(grad_fn)
+        self._err = None      # compression error-feedback buffers
+
+    # -- elastic membership -------------------------------------------------
+    def add_device(self, dev: DeviceGroup) -> None:
+        self.devices.append(dev)
+
+    def remove_device(self, name: str) -> None:
+        self.devices = [d for d in self.devices if d.name != name]
+
+    # -- one co-executed step ------------------------------------------------
+    def step(self, state: TrainState, step_idx: int) -> Tuple[TrainState, StepReport]:
+        B = self.shape.global_batch
+        assert B % self.lws == 0
+        G = B // self.lws
+        alive = [d for d in self.devices if not d.dead]
+        profiles = [DeviceProfile(d.name, d.throughput or 1.0 / d.throttle)
+                    for d in alive]
+        sched = make_scheduler(self.scheduler_name, G, 1, profiles)
+        lock = threading.Lock()
+        acc = {"g": None, "loss": 0.0, "rows": 0, "packets": 0}
+        rows_by_dev: Dict[str, int] = {d.name: 0 for d in alive}
+        state_inflight = {"n": 0}
+        t0 = time.perf_counter()
+
+        def worker(i: int):
+            dev = alive[i]
+            while True:
+                with lock:
+                    pkt = sched.next_packet(i)
+                    if pkt is not None:
+                        state_inflight["n"] += 1
+                if pkt is None:
+                    with lock:
+                        done = state_inflight["n"] == 0 and sched.remaining() == 0
+                        others = any(not d.dead for j, d in enumerate(alive)
+                                     if j != i)
+                    if done or not others:
+                        return
+                    time.sleep(1e-3)
+                    continue
+                rows = slice(pkt.offset * self.lws,
+                             (pkt.offset + pkt.size) * self.lws)
+                batch = self.pipeline.batch_at(step_idx, rows=rows)
+                batch = {k: dev.put(jnp.asarray(v)) for k, v in batch.items()}
+                try:
+                    (loss, g), wg_s = dev.run_packet(
+                        lambda off, size: self._grad(state.params, batch),
+                        pkt.offset, pkt.size)
+                except DeviceFailure:
+                    with lock:
+                        sched.requeue(pkt)
+                        state_inflight["n"] -= 1
+                    return
+                if hasattr(sched, "observe"):
+                    sched.observe(i, wg_s)
+                n_rows = pkt.size * self.lws
+                with lock:
+                    w = float(n_rows)
+                    if acc["g"] is None:
+                        acc["g"] = jax.tree.map(lambda x: x * w, g)
+                    else:
+                        acc["g"] = jax.tree.map(lambda a, x: a + x * w,
+                                                acc["g"], g)
+                    acc["loss"] += float(loss) * n_rows
+                    acc["rows"] += n_rows
+                    acc["packets"] += 1
+                    rows_by_dev[dev.name] += n_rows
+                    state_inflight["n"] -= 1
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(len(alive))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if sched.remaining() > 0 or acc["rows"] != B:
+            raise RuntimeError(
+                f"step {step_idx}: incomplete batch ({acc['rows']}/{B})")
+        grads = jax.tree.map(lambda x: x / acc["rows"], acc["g"])
+        if self.compress:
+            if self._err is None:
+                self._err = C.init_error(state.params)
+            grads, self._err = C.compress_decompress(grads, self._err)
+        new_state, opt_metrics = adamw.apply_updates(state, grads, self.opt)
+        dt = time.perf_counter() - t0
+        busy = [d.busy_time for d in alive]
+        fins = [b for b in busy if b > 0]
+        report = StepReport(
+            loss=acc["loss"] / acc["rows"],
+            tokens=acc["rows"] * self.shape.seq_len,
+            step_time_s=dt,
+            balance=(min(fins) / max(fins)) if len(fins) > 1 else 1.0,
+            packets=acc["packets"],
+            device_rows=dict(rows_by_dev),
+            failures=sum(1 for d in alive if d.dead),
+        )
+        for d in alive:   # reset per-step busy accounting
+            d.busy_time = 0.0
+        return new_state, report

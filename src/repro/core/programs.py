@@ -1,0 +1,131 @@
+"""Program adapters: wrap the kernel suite's ``run_range`` entry points as
+co-execution Programs for the threaded Engine (real execution on JAX
+devices).  Sizes are scaled down from the paper's (which target a ~2 s GTX
+950 run) so the real-execution benches stay fast on one CPU; the simulator
+(configs/paper_suite.py) carries the full calibrated sizes."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.runtime import Program
+from repro.kernels.binomial import ops as binomial_ops
+from repro.kernels.gaussian import ops as gaussian_ops
+from repro.kernels.mandelbrot import ops as mandelbrot_ops
+from repro.kernels.nbody import ops as nbody_ops
+from repro.kernels.ray import ops as ray_ops
+from repro.kernels.ray import ref as ray_ref
+
+
+def gaussian_program(h: int = 1024, w: int = 512, seed: int = 0,
+                     use_pallas: bool = False) -> Program:
+    rng = np.random.default_rng(seed)
+    img = rng.standard_normal((h, w)).astype(np.float32)
+    ip, wts = gaussian_ops.prepare(img)
+    G = gaussian_ops.total_work(img)
+
+    def build(dev):
+        ipd = dev.put(jnp.asarray(ip))
+        wd = dev.put(jnp.asarray(wts))
+
+        def fn(offset, size):
+            return gaussian_ops.run_range(ipd, wd, offset, size,
+                                          use_pallas=use_pallas)
+        return fn
+
+    return Program("gaussian", G, 1, build,
+                   out_rows_per_wg=gaussian_ops.LWS, out_cols=w)
+
+
+def binomial_program(n_options: int = 65536, seed: int = 0,
+                     use_pallas: bool = False) -> Program:
+    s0, k0, ty = binomial_ops.make_inputs(n_options, seed)
+    G = binomial_ops.total_work(n_options)
+
+    def build(dev):
+        a, b, c = (dev.put(jnp.asarray(x)) for x in (s0, k0, ty))
+
+        def fn(offset, size):
+            return binomial_ops.run_range(a, b, c, offset, size,
+                                          use_pallas=use_pallas)
+        return fn
+
+    return Program("binomial", G, 1, build,
+                   out_rows_per_wg=binomial_ops.LWS, out_cols=1)
+
+
+def mandelbrot_program(px: int = 512, max_iter: int = 256,
+                       use_pallas: bool = False) -> Program:
+    G = mandelbrot_ops.total_work(px)
+
+    def build(dev):
+        def fn(offset, size):
+            return mandelbrot_ops.run_range(
+                offset, size, width=px, height=px, max_iter=max_iter,
+                use_pallas=use_pallas)
+        return fn
+
+    return Program("mandelbrot", G, 1, build,
+                   out_rows_per_wg=mandelbrot_ops.LWS * px, out_cols=1,
+                   out_dtype=np.int32)
+
+
+def nbody_program(n_bodies: int = 8192, seed: int = 0,
+                  use_pallas: bool = False) -> Program:
+    pm, vel = nbody_ops.make_inputs(n_bodies, seed)
+    G = nbody_ops.total_work(n_bodies)
+
+    def build(dev):
+        pmd = dev.put(jnp.asarray(pm))
+        vd = dev.put(jnp.asarray(vel))
+
+        def fn(offset, size):
+            return nbody_ops.run_range(pmd, vd, offset, size,
+                                       use_pallas=use_pallas)
+        return fn
+
+    return Program("nbody", G, 1, build,
+                   out_rows_per_wg=nbody_ops.LWS, out_cols=7)
+
+
+def ray_program(which: int = 1, px: int = 256) -> Program:
+    scene = ray_ref.make_scene(which)
+    G = ray_ops.total_work(px)
+
+    def build(dev):
+        sc = {k: dev.put(v) for k, v in scene.items()}
+
+        def fn(offset, size):
+            img = ray_ops.run_range(sc, offset, size, width=px, height=px)
+            return img.reshape(-1, 3)
+        return fn
+
+    return Program(f"ray{which}", G, 1, build,
+                   out_rows_per_wg=ray_ops.LWS * px, out_cols=3)
+
+
+PROGRAMS = {
+    "gaussian": gaussian_program,
+    "binomial": binomial_program,
+    "mandelbrot": mandelbrot_program,
+    "nbody": nbody_program,
+    "ray1": lambda **kw: ray_program(1, **kw),
+    "ray2": lambda **kw: ray_program(2, **kw),
+}
+
+
+def reference_output(program_name: str, **kwargs) -> np.ndarray:
+    """Single-device single-packet execution (the correctness oracle for
+    co-executed outputs)."""
+    prog = PROGRAMS[program_name](**kwargs)
+
+    class _Dev:
+        def put(self, x):
+            return x
+
+    fn = prog.build(_Dev())
+    out = np.asarray(fn(0, prog.total_work))
+    return out.reshape(prog.total_work * prog.out_rows_per_wg, prog.out_cols)

@@ -1,0 +1,253 @@
+"""Load-balancing schedulers (the paper's §II-B, faithful formulas).
+
+Work model: a single data-parallel task of ``G`` *work-groups* (the paper's
+NDRange work-groups; here: image rows, pixels blocks, options, bodies,
+microbatches, requests).  Packets are contiguous ``[offset, offset+size)``
+ranges, ``lws``-aligned except for the final remainder.
+
+* ``Static``      — one packet per device, sized proportionally to its
+                    computing power; delivery order configurable
+                    (``Static`` = CPU,iGPU,GPU / ``Static rev`` = reversed).
+* ``Dynamic(n)``  — n equal packets pulled from an atomic queue.
+* ``HGuided``     — the paper's heterogeneity-aware guided self-scheduling:
+
+      packet_size_i = max( m_i * lws,
+                           ceil( G_r * P_i / (k_i * n * sum_j P_j) ) )
+
+  with G_r = remaining work-groups (updated per launch), k_i in [1, 4],
+  m_i the minimum-packet multiplier of lws.
+* ``HGuidedOpt``  — the paper's optimized HGuided: the (m_i, k_i) pairs are
+  derived from the device power *ranking* per the paper's tuning laws
+  (more powerful => larger m, smaller k; best combo m={1,15,30},
+  k={3.5,1.5,1} for a weak/mid/strong triple), plus optional online EWMA
+  power re-estimation (beyond-paper, used by the hetero-DP trainer).
+
+All schedulers are thread-safe (the paper's "atomic queue") and support
+``requeue`` of in-flight packets for fault tolerance.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class Packet:
+    offset: int
+    size: int
+    seq: int
+    device: int
+
+
+@dataclass
+class DeviceProfile:
+    name: str
+    power: float                 # computing power P_i (work-groups / s)
+    min_mult: int = 1            # m_i: min packet = m_i * lws
+    k: float = 2.0               # k_i decay constant
+
+
+class SchedulerBase:
+    def __init__(self, total_work: int, lws: int,
+                 devices: Sequence[DeviceProfile]):
+        assert total_work > 0 and lws > 0
+        self.G = total_work
+        self.lws = lws
+        self.devices = list(devices)
+        self._lock = threading.Lock()
+        self._offset = 0
+        self._seq = 0
+        self._retry: List[Packet] = []
+
+    # -- public ------------------------------------------------------------
+    def next_packet(self, device: int) -> Optional[Packet]:
+        with self._lock:
+            if self._retry:
+                pkt = self._retry.pop()
+                return Packet(pkt.offset, pkt.size, self._bump(), device)
+            return self._carve(device)
+
+    def requeue(self, pkt: Packet) -> None:
+        """Return an in-flight packet to the queue (device failure)."""
+        with self._lock:
+            self._retry.append(pkt)
+
+    def remaining(self) -> int:
+        with self._lock:
+            return (self.G - self._offset
+                    + sum(p.size for p in self._retry))
+
+    def update_power(self, device: int, power: float) -> None:
+        """Online power re-estimation hook (HGuidedOpt uses it)."""
+        with self._lock:
+            self.devices[device].power = max(power, 1e-9)
+
+    # -- internals ----------------------------------------------------------
+    def _bump(self) -> int:
+        self._seq += 1
+        return self._seq - 1
+
+    def _take(self, size: int, device: int) -> Optional[Packet]:
+        left = self.G - self._offset
+        if left <= 0:
+            return None
+        size = min(size, left)
+        pkt = Packet(self._offset, size, self._bump(), device)
+        self._offset += size
+        return pkt
+
+    def _align(self, size: int) -> int:
+        return max(self.lws, self.lws * math.ceil(size / self.lws))
+
+    def _carve(self, device: int) -> Optional[Packet]:
+        raise NotImplementedError
+
+
+class StaticScheduler(SchedulerBase):
+    """One power-proportional packet per device. ``order`` gives the delivery
+    order of the chunks over the work range (paper: Static vs Static rev)."""
+
+    def __init__(self, total_work, lws, devices, order: Optional[List[int]] = None):
+        super().__init__(total_work, lws, devices)
+        self.order = list(order) if order is not None else list(range(len(devices)))
+        total_p = sum(d.power for d in self.devices)
+        sizes = {}
+        acc = 0
+        for idx, di in enumerate(self.order):
+            if idx == len(self.order) - 1:
+                sizes[di] = self.G - acc
+            else:
+                s = min(self._align(self.G * self.devices[di].power / total_p),
+                        self.G - acc)
+                sizes[di] = s
+                acc += s
+        self._sizes = sizes
+        self._given: Dict[int, bool] = {}
+
+    def _carve(self, device: int) -> Optional[Packet]:
+        if self._given.get(device):
+            return None
+        # chunks are laid out in `order`: compute this device's offset
+        off = 0
+        for di in self.order:
+            if di == device:
+                break
+            off += self._sizes[di]
+        size = self._sizes[device]
+        if size <= 0 or off >= self.G:
+            self._given[device] = True
+            return None
+        self._given[device] = True
+        pkt = Packet(off, min(size, self.G - off), self._bump(), device)
+        return pkt
+
+    def remaining(self) -> int:  # static: everything is pre-assigned
+        with self._lock:
+            done = sum(self._sizes[d] for d, g in self._given.items() if g)
+            return self.G - done + sum(p.size for p in self._retry)
+
+
+class DynamicScheduler(SchedulerBase):
+    """n_packets equal chunks from an atomic queue (paper's Dynamic)."""
+
+    def __init__(self, total_work, lws, devices, n_packets: int = 128):
+        super().__init__(total_work, lws, devices)
+        self.packet_size = self._align(math.ceil(total_work / n_packets))
+
+    def _carve(self, device: int) -> Optional[Packet]:
+        return self._take(self.packet_size, device)
+
+
+class HGuidedScheduler(SchedulerBase):
+    """The paper's HGuided (eq. in §II-B)."""
+
+    def _carve(self, device: int) -> Optional[Packet]:
+        d = self.devices[device]
+        total_p = sum(x.power for x in self.devices)
+        G_r = self.G - self._offset
+        if G_r <= 0:
+            return None
+        n = len(self.devices)
+        raw = math.ceil(G_r * d.power / (d.k * n * total_p))
+        size = max(d.min_mult * self.lws, self._align(raw))
+        return self._take(size, device)
+
+
+def tuned_profiles(devices: Sequence[DeviceProfile]) -> List[DeviceProfile]:
+    """Apply the paper's tuning laws by power ranking: strongest gets
+    (m=30, k=1), mid (15, 1.5), weakest (1, 3.5); for n != 3 interpolate in
+    rank space.  Single-k fallback (paper conclusion d) is k=2."""
+    n = len(devices)
+    out = [DeviceProfile(d.name, d.power, d.min_mult, d.k) for d in devices]
+    if n == 1:
+        out[0].min_mult, out[0].k = 1, 2.0
+        return out
+    ranked = sorted(range(n), key=lambda i: devices[i].power)
+    m_lo, m_hi = 1, 30
+    k_lo, k_hi = 1.0, 3.5
+    for rank, i in enumerate(ranked):
+        t = rank / (n - 1)            # 0 = weakest, 1 = strongest
+        if n == 3:                    # exact paper combo
+            m = (1, 15, 30)[rank]
+            k = (3.5, 1.5, 1.0)[rank]
+        else:
+            m = round(m_lo + (m_hi - m_lo) * t)
+            k = k_hi + (k_lo - k_hi) * t
+        out[i].min_mult = int(m)
+        out[i].k = float(k)
+    return out
+
+
+class HGuidedOptScheduler(HGuidedScheduler):
+    """HGuided with the paper's tuned (m, k) pairs + online EWMA powers.
+
+    The minimum-packet multipliers are additionally capped at 1/4 of the
+    device's fair share: the paper's m=30 is tuned for a 3-device desktop;
+    at fleet scale a large forced minimum would hand a group half its share
+    in one unadaptable packet."""
+
+    def __init__(self, total_work, lws, devices, ewma: float = 0.5):
+        profs = tuned_profiles(devices)
+        total_p = sum(d.power for d in profs) or 1.0
+        n = len(profs)
+        for d in profs:
+            share_wg = total_work * d.power / total_p
+            d.min_mult = max(1, min(d.min_mult, int(share_wg / (4 * lws))))
+            if n > 8:
+                # fleet-scale adaptation (beyond paper): with near-equal
+                # groups (a) k=1 issues a device's whole fair share as its
+                # first packet and removes all adaptation headroom — the
+                # paper's single-k conclusion (k=2) is the right floor; and
+                # (b) every group is "untuned", so the paper's conclusion
+                # (e) applies: keep m=1 — a forced minimum packet is what
+                # strands work on stragglers at the tail
+                d.k = max(d.k, 2.0)
+                d.min_mult = 1
+        super().__init__(total_work, lws, profs)
+        self.ewma = ewma
+        self._obs: Dict[int, float] = {}
+
+    def observe(self, device: int, wg_per_s: float) -> None:
+        """Feed measured throughput; re-rank powers online."""
+        prev = self._obs.get(device)
+        cur = wg_per_s if prev is None else (self.ewma * wg_per_s
+                                             + (1 - self.ewma) * prev)
+        self._obs[device] = cur
+        self.update_power(device, cur)
+
+
+SCHEDULERS = {
+    "static": StaticScheduler,
+    "static_rev": lambda G, lws, devs, **kw: StaticScheduler(
+        G, lws, devs, order=list(reversed(range(len(devs)))), **kw),
+    "dynamic": DynamicScheduler,
+    "hguided": HGuidedScheduler,
+    "hguided_opt": HGuidedOptScheduler,
+}
+
+
+def make_scheduler(name: str, total_work: int, lws: int,
+                   devices: Sequence[DeviceProfile], **kw) -> SchedulerBase:
+    return SCHEDULERS[name](total_work, lws, devices, **kw)

@@ -1,0 +1,196 @@
+"""Discrete-event co-execution simulator.
+
+The threaded Engine (core/runtime.py) runs the real code paths, but this
+container has one physical CPU — relative device speeds can't be reproduced
+in wall-clock.  The simulator executes the *same scheduler objects* against
+calibrated device models instead, which (a) reproduces the paper's
+CPU/iGPU/GPU testbed faithfully, and (b) scales the evaluation to 1000+
+device groups (elastic joins, failures, stragglers) in milliseconds.
+
+Device model (per packet of size s work-groups starting at offset o):
+
+    t = launch_overhead + s / throughput(o, s) [+ transfer costs]
+
+* ``throughput(o, s)`` supports *irregular* programs (Ray, Mandelbrot): the
+  per-work-group cost varies across the range, which is exactly what makes
+  Static mis-balance in the paper.
+* ``launch_overhead`` models the per-packet management/synchronization cost
+  (host thread, driver queueing).  More packets => more overhead: the
+  Dynamic-with-512-chunks pathology.
+* init/teardown constants model the binary-mode costs; the ``opt_init`` /
+  ``opt_buffers`` flags change them (and the per-packet transfer term)
+  according to the measured effects of the paper's optimizations.
+
+Events are device-completion times in a heap; the scheduler is consulted
+exactly as in the threaded runtime (same next_packet/observe/requeue API).
+Failures: a device dies at ``fail_at`` seconds; its in-flight packet is
+requeued (fault tolerance) — stragglers: throughput multiplier drops at a
+given time.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.metrics import RunResult
+from repro.core.scheduler import DeviceProfile, make_scheduler
+
+# fraction of the input set that is full-size read-only buffers, re-copied
+# per packet by the unoptimized buffer path
+BULK_COPY_FRACTION = 0.45
+
+
+@dataclass
+class SimDevice:
+    name: str
+    throughput: float                      # work-groups / second (base)
+    launch_overhead: float = 2e-4          # s per packet
+    transfer_in: float = 0.0               # s per work-group of input
+    transfer_out: float = 0.0              # s per work-group of output
+    # irregularity: relative cost multiplier across the work range [0,1]
+    irregularity: Optional[Callable[[float], float]] = None
+    fail_at: Optional[float] = None        # hard failure time (s)
+    straggle_at: Optional[float] = None    # throughput drops at this time
+    straggle_factor: float = 1.0           # multiplier after straggle_at
+    zero_copy: bool = False                # shares host memory (iGPU/CPU)
+    # what the *scheduler profile* believes this device's power is, relative
+    # to truth (offline profiling bias).  Static pays the full price of a
+    # wrong profile; guided schedulers adapt via their shrinking tail.
+    profile_bias: float = 1.0
+    # per-packet multiplicative execution-time jitter (lognormal sigma)
+    jitter: float = 0.0
+
+    def packet_time(self, offset: int, size: int, total: int, now: float,
+                    opt_buffers: bool) -> float:
+        # irregular work density integrated over the packet's range
+        if self.irregularity is not None and total > 0:
+            steps = 8
+            acc = 0.0
+            for i in range(steps):
+                x = (offset + size * (i + 0.5) / steps) / total
+                acc += self.irregularity(x)
+            density = acc / steps
+        else:
+            density = 1.0
+        # piecewise straggling: work done before straggle_at runs at full
+        # speed, the remainder at straggle_factor (a packet spanning the
+        # slowdown pays for its tail — this is what makes pre-assigned
+        # static chunks so expensive under stragglers)
+        d0 = size * density / self.throughput
+        if self.straggle_at is not None:
+            if now >= self.straggle_at:
+                d0 = d0 / self.straggle_factor
+            elif now + d0 > self.straggle_at:
+                done = self.straggle_at - now
+                d0 = done + (d0 - done) / self.straggle_factor
+        t = self.launch_overhead + d0
+        xfer = (self.transfer_in + self.transfer_out) * size
+        if opt_buffers:
+            # buffer-flag optimization: the driver recognizes read-only /
+            # shared buffers — zero-copy on shared-memory devices, only the
+            # necessary per-range copy on discrete ones
+            xfer = 0.0 if self.zero_copy else xfer
+        else:
+            # without the flags EVERY PACKET bulk-copies the full-size
+            # read-only inputs (the paper's "unnecessary complete bulk
+            # copies of memory regions") — cost scales with the TOTAL
+            # problem size per packet, which is what penalizes co-execution
+            # (many packets) far more than a single-device run (one packet)
+            xfer += BULK_COPY_FRACTION * (self.transfer_in
+                                          + self.transfer_out) * total
+        return t + xfer
+
+
+@dataclass
+class SimConfig:
+    scheduler: str = "hguided"
+    scheduler_kwargs: Dict = field(default_factory=dict)
+    opt_init: bool = False
+    opt_buffers: bool = False
+    # binary-mode constants (paper Fig. 6: ~constant offset per run)
+    init_cost: float = 0.230               # s, unoptimized init+release
+    init_cost_optimized: float = 0.099     # s, saves ~131 ms (paper §V-B)
+    # co-execution-only synchronization cost (scheduler start/stop barriers,
+    # host-thread management): not paid by a single-device run
+    sync_cost: float = 0.105
+    sync_cost_optimized: float = 0.085
+    # serialized host cost per packet launch (Runtime+Scheduler are host
+    # threads; every launch crosses them — the paper's "the more packages
+    # ... the more management ... incurring in more overheads")
+    host_cost_per_packet: float = 1.0e-3
+    seed: int = 0
+
+
+def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
+             cfg: SimConfig) -> RunResult:
+    import random
+    rng = random.Random(cfg.seed)
+    profiles = [DeviceProfile(d.name, d.throughput * d.profile_bias)
+                for d in devices]
+    sched = make_scheduler(cfg.scheduler, total_work, lws, profiles,
+                           **cfg.scheduler_kwargs)
+    n = len(devices)
+    now = [0.0] * n                        # per-device clock
+    busy = [0.0] * n
+    finish = [0.0] * n
+    packets: List = []
+    heap: List[Tuple[float, int]] = []     # (ready_time, device)
+    for i in range(n):
+        heapq.heappush(heap, (0.0, i))
+    dead = [False] * n
+    pending_retry: List = []
+
+    host_free = 0.0
+    while heap:
+        t, i = heapq.heappop(heap)
+        d = devices[i]
+        if dead[i]:
+            continue
+        pkt = sched.next_packet(i)
+        if pkt is None:
+            finish[i] = max(finish[i], t)
+            continue
+        # every launch serializes through the host Runtime/Scheduler threads
+        start = max(t, host_free)
+        host_free = start + cfg.host_cost_per_packet
+        dt = d.packet_time(pkt.offset, pkt.size, total_work, start,
+                           cfg.opt_buffers) + (start - t)
+        if d.jitter > 0:
+            dt *= math.exp(rng.gauss(0.0, d.jitter))
+        end = t + dt
+        if d.fail_at is not None and end > d.fail_at >= t:
+            # device dies mid-packet: requeue, mark dead
+            dead[i] = True
+            finish[i] = d.fail_at
+            sched.requeue(pkt)
+            # wake an idle survivor (if any already drained the queue)
+            for j in range(n):
+                if not dead[j]:
+                    heapq.heappush(heap, (max(d.fail_at, finish[j]), j))
+            continue
+        busy[i] += dt
+        finish[i] = end
+        packets.append(pkt)
+        if hasattr(sched, "observe"):
+            sched.observe(i, pkt.size / max(dt, 1e-12))
+        heapq.heappush(heap, (end, i))
+
+    if sched.remaining() > 0:
+        raise RuntimeError("all devices failed with work remaining")
+    roi = max(finish)
+    if n > 1:  # co-execution pays the host synchronization cost
+        roi += cfg.sync_cost_optimized if cfg.opt_init else cfg.sync_cost
+    init = cfg.init_cost_optimized if cfg.opt_init else cfg.init_cost
+    return RunResult(total_time=roi, device_busy=busy, device_finish=finish,
+                     packets=packets, binary_time=roi + init,
+                     aborted_devices=sum(dead))
+
+
+def single_device_time(total_work: int, lws: int, device: SimDevice,
+                       cfg: Optional[SimConfig] = None) -> float:
+    """Whole problem on one device, one packet (the paper's baseline)."""
+    cfg = cfg or SimConfig()
+    return device.packet_time(0, total_work, total_work, 0.0,
+                              cfg.opt_buffers)

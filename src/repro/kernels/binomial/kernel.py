@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: binomial option pricing, option-tile blocked.
+
+TPU adaptation: OpenCL maps one option per work-group and one tree level
+per 255-work-item local array with barriers between backward-induction
+steps.  On TPU the whole (tile_opts, steps+1) value plane lives in VMEM and
+each induction step is one fused VPU op over the plane — barriers become
+data flow.  tile=128 options x 256 levels x 4B = 128 KiB VMEM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.binomial.ref import RISKFREE, VOLATILITY
+
+
+def _binomial_kernel(s0_ref, strike_ref, ty_ref, out_ref, *, steps: int):
+    s0 = s0_ref[...]
+    strike = strike_ref[...]
+    ty = ty_ref[...]
+    dt = ty / steps
+    vdt = VOLATILITY * jnp.sqrt(dt)
+    u_minus_d = jnp.exp(vdt) - jnp.exp(-vdt)
+    a = jnp.exp(RISKFREE * dt)
+    pu = (a - jnp.exp(-vdt)) / u_minus_d
+    pd = 1.0 - pu
+    disc = jnp.exp(-RISKFREE * dt)
+    j = jnp.arange(steps + 1, dtype=jnp.float32)
+    sT = s0[:, None] * jnp.exp(vdt[:, None] * (2.0 * j[None, :] - steps))
+    v = jnp.maximum(sT - strike[:, None], 0.0)
+
+    def body(i, v):
+        vn = disc[:, None] * (pd[:, None] * v[:, :-1] + pu[:, None] * v[:, 1:])
+        return jnp.concatenate([vn, v[:, -1:]], axis=1)
+
+    v = jax.lax.fori_loop(0, steps, body, v)
+    out_ref[...] = v[:, 0]
+
+
+def price_options(s0, strike, t_years, *, steps: int = 254,
+                  tile: int = 128, interpret: bool = True):
+    n = s0.shape[0]
+    assert n % tile == 0, (n, tile)
+    kernel = functools.partial(_binomial_kernel, steps=steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 3,
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(s0, strike, t_years)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: exact causal attention (materialized scores)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """q: (B,S,H,D); k,v: (B,S,KH,D) with H % KH == 0 -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, S, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: single-token cached decode attention (GQA)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """q: (B,H,D); caches: (B,S,KH,D); pos: () -> (B,H,D).
+    Attends to cache positions [0, pos]."""
+    B, H, D = q.shape
+    KH = k_cache.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    valid = (jnp.arange(k_cache.shape[1]) <= pos)[None, None, None, :]
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: chunked selective scan (Mamba1 recurrence).
+
+TPU adaptation: the CUDA kernel parallelizes over (batch, d_inner) threads
+with a sequential time loop in registers.  Here the grid is
+(batch, d_inner tiles, seq chunks); the innermost chunk axis is sequential
+("arbitrary" dimension semantics) and carries the hidden state in a VMEM
+scratch that persists across grid steps — the TPU analogue of the
+register-resident state.  Within a chunk the recurrence is an in-VMEM
+fori loop over (tile_d, ds) planes: elementwise VPU work with zero HBM
+traffic for intermediate h.  VMEM per step: 3 * chunk * tile_d * ds * 4B
+(a,b blocks) + tile_d * ds scratch ≈ 2.2 MiB at chunk=64, tile_d=512,
+ds=16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, c_ref, y_ref, hout_ref, h_scr, *,
+                 chunk: int, tile_d: int, ds: int):
+    jc = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(jc == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[...].reshape(chunk, tile_d, ds)
+    b = b_ref[...].reshape(chunk, tile_d, ds)
+    c = c_ref[...].reshape(chunk, ds)
+
+    def body(t, carry):
+        h, ys = carry
+        h = a[t] * h + b[t]                       # (tile_d, ds)
+        y = (h * c[t][None, :]).sum(axis=1)       # (tile_d,)
+        ys = jax.lax.dynamic_update_slice(ys, y[None, :], (t, 0))
+        return h, ys
+
+    h0 = h_scr[...]
+    ys0 = jnp.zeros((chunk, tile_d), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, body, (h0, ys0))
+    h_scr[...] = h
+    y_ref[...] = ys.reshape(1, chunk, tile_d)
+
+    @pl.when(jc == nc - 1)
+    def _finish():
+        hout_ref[...] = h.reshape(1, tile_d, ds)
+
+
+def selective_scan(a, b, C, *, chunk: int = 64, tile_d: int = 512,
+                   interpret: bool = True):
+    """a,b: (B,S,di,ds) f32; C: (B,S,ds) f32 -> (y (B,S,di), h (B,di,ds))."""
+    B, S, di, ds = a.shape
+    chunk = min(chunk, S)
+    tile_d = min(tile_d, di)
+    assert S % chunk == 0 and di % tile_d == 0, (S, chunk, di, tile_d)
+    kernel = functools.partial(_scan_kernel, chunk=chunk, tile_d=tile_d,
+                               ds=ds)
+    # layouts: a,b -> (B, di_tiles... ) keep (B, S, di, ds); block over S and di
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(B, di // tile_d, S // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, tile_d, ds),
+                         lambda bi, di_, jc: (bi, jc, di_, 0)),
+            pl.BlockSpec((1, chunk, tile_d, ds),
+                         lambda bi, di_, jc: (bi, jc, di_, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda bi, di_, jc: (bi, jc, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, tile_d), lambda bi, di_, jc: (bi, jc, di_)),
+            pl.BlockSpec((1, tile_d, ds), lambda bi, di_, jc: (bi, di_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((tile_d, ds), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+        if hasattr(pltpu, "CompilerParams") else None,
+    )(a, b, C)
+    return y, h

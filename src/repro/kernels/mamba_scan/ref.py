@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: sequential selective-scan recurrence.
+
+h_t = a_t * h_{t-1} + b_t ;  y_t = sum_s C_t[s] * h_t[:, s]
+a,b: (B,S,di,ds); C: (B,S,ds) -> y: (B,S,di), h_T: (B,di,ds)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(a, b, C, h0=None):
+    B, S, di, ds = a.shape
+    h = jnp.zeros((B, di, ds), jnp.float32) if h0 is None else h0
+
+    def body(h, xs):
+        at, bt, Ct = xs
+        h = at * h + bt
+        y = jnp.einsum("bds,bs->bd", h, Ct)
+        return h, y
+
+    h, ys = jax.lax.scan(
+        body, h, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0),
+                  jnp.moveaxis(C, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h

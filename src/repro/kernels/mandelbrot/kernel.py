@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: Mandelbrot escape iterations, row-tile blocked.
+
+TPU adaptation: the OpenCL kernel is one work-item per pixel with early
+exit; SIMD lanes on the VPU can't exit early, so the kernel runs the fixed
+``max_iter`` loop over a (tile_h, W) VMEM tile with a liveness mask — the
+exact shape a TPU vector unit wants.  The irregularity the paper exploits
+(work varies per region) survives at packet granularity: rows in the
+needle/bulb region cost the full 5000 iterations in every lane, edge rows
+exit the mask early (the `alive` popcount drops but the loop is fixed —
+cost becomes uniform per packet, which is FASTER and is recorded in
+DESIGN.md as a TPU-vs-GPU behavioural difference; the co-execution figures
+model the GPU-style early-exit cost profile in the simulator)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.mandelbrot.ref import X0, X1, Y0, Y1
+
+
+def _mandel_kernel(row0_ref, out_ref, *, width: int, height: int,
+                   tile_h: int, max_iter: int):
+    i = pl.program_id(0)
+    row0 = row0_ref[0] + i * tile_h
+    ys = Y0 + (Y1 - Y0) * (jnp.arange(tile_h, dtype=jnp.float32)
+                           + row0.astype(jnp.float32) + 0.5) / height
+    xs = X0 + (X1 - X0) * (jnp.arange(width, dtype=jnp.float32) + 0.5) / width
+    cr = jnp.broadcast_to(xs[None, :], (tile_h, width))
+    ci = jnp.broadcast_to(ys[:, None], (tile_h, width))
+
+    def body(_, st):
+        zr, zi, cnt = st
+        zr2, zi2 = zr * zr, zi * zi
+        alive = (zr2 + zi2) <= 4.0
+        new_zr = jnp.where(alive, zr2 - zi2 + cr, zr)
+        new_zi = jnp.where(alive, 2 * zr * zi + ci, zi)
+        return new_zr, new_zi, cnt + alive.astype(jnp.int32)
+
+    zr = jnp.zeros((tile_h, width), jnp.float32)
+    zi = jnp.zeros((tile_h, width), jnp.float32)
+    cnt = jnp.zeros((tile_h, width), jnp.int32)
+    _, _, cnt = jax.lax.fori_loop(0, max_iter, body, (zr, zi, cnt))
+    out_ref[...] = cnt
+
+
+def escape_counts(row0, n_rows: int, width: int, height: int,
+                  max_iter: int, *, tile_h: int = 8, interpret: bool = True):
+    assert n_rows % tile_h == 0
+    grid = (n_rows // tile_h,)
+    kernel = functools.partial(_mandel_kernel, width=width, height=height,
+                               tile_h=tile_h, max_iter=max_iter)
+    row0_arr = jnp.asarray([row0], jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((tile_h, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, width), jnp.int32),
+        interpret=interpret,
+    )(row0_arr)

@@ -1,0 +1,40 @@
+"""Mandelbrot op: jit'd wrapper + range-partitionable entry (lws=256 px
+rows... the paper's lws=256 work-items = 1 row-block of the 14336px image;
+we define 1 work-group = 1 pixel row block of 256/width... practically:
+one work-group = 2 rows at width 128 lanes per row-group; for simplicity
+1 work-group = 1 image row)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mandelbrot import kernel as K
+from repro.kernels.mandelbrot import ref as R
+
+LWS = 8            # rows per work-group (alignment unit for packets)
+MAX_ITER = 5000
+
+
+@partial(jax.jit, static_argnames=("n_rows", "width", "height", "max_iter",
+                                   "use_pallas", "interpret"))
+def _run(row0, *, n_rows: int, width: int, height: int, max_iter: int,
+         use_pallas: bool = False, interpret: bool = True):
+    if use_pallas:
+        return K.escape_counts(row0, n_rows, width, height, max_iter,
+                               interpret=interpret)
+    return R.escape_counts(row0, n_rows, width, height, max_iter)
+
+
+def run_range(offset: int, size: int, *, width: int, height: int,
+              max_iter: int = MAX_ITER, use_pallas: bool = False,
+              interpret: bool = True):
+    return _run(jnp.int32(offset * LWS), n_rows=size * LWS, width=width,
+                height=height, max_iter=max_iter, use_pallas=use_pallas,
+                interpret=interpret)
+
+
+def total_work(height: int) -> int:
+    assert height % LWS == 0
+    return height // LWS

@@ -1,0 +1,56 @@
+"""NBody op: jit'd wrapper + range-partitionable entry (lws=64 bodies)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.nbody import kernel as K
+from repro.kernels.nbody import ref as R
+
+LWS = 64
+DT = R.DT
+
+
+def make_inputs(n_bodies: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    pos = rng.standard_normal((n_bodies, 3)).astype(np.float32) * 10.0
+    mass = rng.uniform(0.5, 2.0, (n_bodies, 1)).astype(np.float32)
+    vel = rng.standard_normal((n_bodies, 3)).astype(np.float32) * 0.1
+    return np.concatenate([pos, mass], 1), vel
+
+
+@partial(jax.jit, static_argnames=("size", "use_pallas", "interpret"))
+def _run(pos_mass, vel, offset, *, size: int, use_pallas: bool = False,
+         interpret: bool = True):
+    if use_pallas:
+        tgt = jax.lax.dynamic_slice(pos_mass, (offset, 0), (size, 4))
+        acc = K.accelerations(tgt, pos_mass, tile_t=min(128, size),
+                              interpret=interpret)
+        v = jax.lax.dynamic_slice(vel, (offset, 0), (size, 3)) + acc * DT
+        p = tgt[:, :3] + v * DT
+        return jnp.concatenate([p, tgt[:, 3:], v], axis=1)
+    tgt = jax.lax.dynamic_slice(pos_mass, (offset, 0), (size, 4))
+    src = pos_mass[:, :3]
+    m = pos_mass[:, 3]
+    d = src[None, :, :] - tgt[:, None, :3]
+    r2 = (d * d).sum(-1) + R.EPS2
+    inv_r3 = jax.lax.rsqrt(r2) / r2 * m[None, :]
+    acc = (d * inv_r3[..., None]).sum(axis=1)
+    v = jax.lax.dynamic_slice(vel, (offset, 0), (size, 3)) + acc * DT
+    p = tgt[:, :3] + v * DT
+    return jnp.concatenate([p, tgt[:, 3:], v], axis=1)
+
+
+def run_range(pos_mass, vel, offset: int, size: int, *,
+              use_pallas: bool = False, interpret: bool = True):
+    """Returns (size*LWS, 7) rows: [x,y,z,m,vx,vy,vz] after one step."""
+    return _run(pos_mass, vel, jnp.int32(offset * LWS), size=size * LWS,
+                use_pallas=use_pallas, interpret=interpret)
+
+
+def total_work(n_bodies: int) -> int:
+    assert n_bodies % LWS == 0
+    return n_bodies // LWS

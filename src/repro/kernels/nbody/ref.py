@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for NBody (paper Table I: lws=64, 229376 bodies,
+2:2 buffers, 7 kernel args): one Euler step of all-pairs gravitation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS2 = 1e-3
+DT = 0.005
+
+
+def accelerations(pos_mass, tgt0: int, n_tgt: int):
+    """pos_mass: (N, 4) = [x,y,z,m]; returns (n_tgt, 3) accelerations of
+    bodies [tgt0, tgt0+n_tgt)."""
+    tgt = jnp.asarray(pos_mass[tgt0:tgt0 + n_tgt, :3])
+    src = pos_mass[:, :3]
+    m = pos_mass[:, 3]
+    d = src[None, :, :] - tgt[:, None, :]               # (T, N, 3)
+    r2 = (d * d).sum(-1) + EPS2
+    inv_r3 = jnp.power(r2, -1.5) * m[None, :]
+    return (d * inv_r3[..., None]).sum(axis=1)          # (T, 3)
+
+
+def step(pos_mass, vel, tgt0: int, n_tgt: int):
+    """Euler update of the target slice; returns (new_pos_mass_slice,
+    new_vel_slice) each (n_tgt, 4)/(n_tgt, 3)."""
+    acc = accelerations(pos_mass, tgt0, n_tgt)
+    v = vel[tgt0:tgt0 + n_tgt] + acc * DT
+    p = pos_mass[tgt0:tgt0 + n_tgt, :3] + v * DT
+    pm = jnp.concatenate([p, pos_mass[tgt0:tgt0 + n_tgt, 3:]], axis=1)
+    return pm, v

@@ -1,0 +1,31 @@
+"""Ray op: jit'd wrapper + range-partitionable entry (lws=128 -> one
+work-group = 1 pixel row; paper scene sizes 4096px)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ray import ref as R
+
+LWS = 4            # rows per work-group
+
+
+@partial(jax.jit, static_argnames=("n_rows", "width", "height"))
+def _run(centers, radii, colors, row0, *, n_rows: int, width: int,
+         height: int):
+    scene = {"centers": centers, "radii": radii, "colors": colors}
+    return R.render_rows(scene, row0, n_rows, width, height)
+
+
+def run_range(scene, offset: int, size: int, *, width: int, height: int,
+              **_):
+    return _run(scene["centers"], scene["radii"], scene["colors"],
+                jnp.int32(offset * LWS), n_rows=size * LWS, width=width,
+                height=height)
+
+
+def total_work(height: int) -> int:
+    assert height % LWS == 0
+    return height // LWS

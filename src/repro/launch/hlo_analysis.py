@@ -1,0 +1,103 @@
+"""Post-SPMD HLO analysis: collective inventory and wire-byte estimates.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the compiled
+module text.  Shapes in the partitioned module are *per-device*; wire bytes
+use ring-algorithm estimates with the replica-group size parsed from the op:
+
+    all-gather          O * (N-1)/N
+    reduce-scatter      O * (N-1)        (O = scattered per-device output)
+    all-reduce          2 * O * (N-1)/N  (reduce-scatter + all-gather)
+    all-to-all          O * (N-1)/N
+    collective-permute  O
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"(" + "|".join(_COLL) + r")(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_OPNAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+                        r"(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+                        r"([\w\-]+)\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _wire_bytes(kind: str, out_bytes: int, group: int) -> float:
+    g = max(group, 2)
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * (g - 1) / g
+    if kind == "all-gather":
+        return out_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return out_bytes * (g - 1)
+    if kind == "all-to-all":
+        return out_bytes * (g - 1) / g
+    return float(out_bytes)  # collective-permute
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: count, result bytes, estimated wire bytes
+    (all per device, per execution)."""
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        type_str, kind, start = m.group(1), m.group(2), m.group(3)
+        out_b = _shape_bytes(type_str)
+        if start:  # async start op: result tuple repeats the operand; halve
+            out_b //= 2
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            group = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            group = len(gl.group(1).split(",")) if gl else 2
+        s = stats[kind]
+        s["count"] += 1
+        s["result_bytes"] += out_b
+        s["wire_bytes"] += _wire_bytes(kind, out_b, group)
+    return dict(stats)
+
+
+def op_histogram(hlo_text: str, top: int = 25) -> List[Tuple[str, int]]:
+    hist: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OPNAME_RE.match(line)
+        if m:
+            hist[m.group(1)] += 1
+    return sorted(hist.items(), key=lambda kv: -kv[1])[:top]
+
+
+def total_wire_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(s["wire_bytes"] for s in stats.values())

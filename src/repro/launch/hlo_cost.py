@@ -1,0 +1,415 @@
+"""Loop-corrected cost model over compiled HLO text.
+
+``Compiled.cost_analysis()`` counts every ``while`` body exactly ONCE, so a
+scan-over-layers / grad-accumulation program under-reports FLOPs, HBM bytes
+and collectives by the loop trip counts (verified empirically: an 8-step
+scan reports 1/8 of the unrolled FLOPs).  Since the entire framework is
+scan-based (that's what keeps the 512-way GSPMD compile tractable), we walk
+the compiled module text instead:
+
+  * computations are parsed into instruction lists with a per-computation
+    symbol table (every instruction line carries its result type);
+  * ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` —
+    body+cond costs are multiplied by the trip count (nested loops compose);
+  * ``fusion`` ops contribute the FLOPs of their fused computation and the
+    HBM traffic of their operands/result (post-fusion buffer traffic is the
+    right HBM model);
+  * dots: 2 * prod(result) * prod(lhs contracting dims); elementwise: 1
+    flop/element; transcendentals counted via ``transcendentals``;
+  * in-place patterns are special-cased so decode doesn't report phantom
+    traffic: dynamic-update-slice counts 2x the *update* bytes (not the
+    cache), dynamic-slice / gather count the *slice* bytes.
+
+Everything is derived from the compiled artifact — this is the §Roofline
+data source.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "not", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "clamp", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "convert", "is-finite", "popcnt", "clz",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "sqrt", "rsqrt", "power",
+                   "sine", "cosine", "logistic", "log-plus-one",
+                   "exponential-minus-one", "atan2", "cbrt", "erf", "tan"}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*.*\{\s*$")
+# NB: tuple types contain /*index=N*/ comments, so allow anything except
+# parens inside the tuple alternative (XLA tuple types are never nested in
+# instruction result positions).
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_PARAM_NUM = re.compile(r"parameter\((\d+)\)")
+
+
+def _type_bytes(t: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(t):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(t: str) -> int:
+    total = 0
+    for _, dims in _SHAPE.findall(t):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_dims(t: str) -> List[int]:
+    m = _SHAPE.search(t)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    type: str
+    op: str
+    rest: str            # raw operand + attribute text
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, str] = field(default_factory=dict)   # name -> type
+    params: List[str] = field(default_factory=list)       # operand order
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    transcendentals: float = 0.0
+    traffic_bytes: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def scaled(self, k: float) -> "CostTotals":
+        out = CostTotals(self.flops * k, self.dot_flops * k,
+                         self.transcendentals * k,
+                         self.traffic_bytes * k, {}, self.unknown_trip_loops)
+        for kind, s in self.collectives.items():
+            out.collectives[kind] = {kk: vv * k if kk != "group" else vv
+                                     for kk, vv in s.items()}
+        return out
+
+    def add(self, other: "CostTotals") -> None:
+        self.flops += other.flops
+        self.dot_flops += other.dot_flops
+        self.transcendentals += other.transcendentals
+        self.traffic_bytes += other.traffic_bytes
+        self.unknown_trip_loops += other.unknown_trip_loops
+        for kind, s in other.collectives.items():
+            mine = self.collectives.setdefault(
+                kind, {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0})
+            for kk in ("count", "result_bytes", "wire_bytes"):
+                mine[kk] += s.get(kk, 0.0)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip()) if ("{" in line and "->" in line) else None
+            if m:
+                cur = Computation(name=m.group(2))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, typ, op, rest = m.group(1), m.group(2), m.group(3), m.group(4)
+        # operands: %names before the closing paren of the op call
+        depth = 1
+        i = 0
+        while i < len(rest) and depth > 0:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        opers = _OPERAND.findall(rest[:i])
+        ins = Instr(name, typ, op, rest, opers)
+        cur.instrs.append(ins)
+        cur.table[name] = typ
+        if op == "parameter":
+            pm = _PARAM_NUM.search("parameter(" + rest)
+            idx = int(pm.group(1)) if pm else len(cur.params)
+            while len(cur.params) <= idx:
+                cur.params.append("")
+            cur.params[idx] = name
+    return comps
+
+
+def _wire_bytes(kind: str, out_bytes: float, group: int) -> float:
+    g = max(group, 2)
+    if kind == "all-reduce":
+        return 2.0 * out_bytes * (g - 1) / g
+    if kind == "all-gather":
+        return out_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return out_bytes * (g - 1)
+    if kind == "all-to-all":
+        return out_bytes * (g - 1) / g
+    return float(out_bytes)
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.entry = self._find_entry(text)
+        self._memo: Dict[str, CostTotals] = {}
+
+    def _find_entry(self, text: str) -> str:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    return m.group(2)
+        # fallback: last computation
+        return list(self.comps)[-1]
+
+    # -- per-instruction local costs --------------------------------------
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        out_elems = _type_elems(ins.type)
+        cm = _CONTRACT.search(ins.rest)
+        contract = 1
+        if cm and ins.operands:
+            lhs_t = comp.table.get(ins.operands[0], "")
+            dims = _shape_dims(lhs_t)
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
+        return 2.0 * out_elems * contract
+
+    def _fusion_flops(self, callee: Computation) -> Tuple[float, float, float]:
+        fl = tr = df = 0.0
+        for ins in callee.instrs:
+            if ins.op == "dot":
+                d = self._dot_flops(callee, ins)
+                fl += d
+                df += d
+            elif ins.op in _ELEMENTWISE:
+                fl += _type_elems(ins.type)
+            elif ins.op in _TRANSCENDENTAL:
+                tr += _type_elems(ins.type)
+            elif ins.op == "reduce":
+                fl += max(_type_elems(callee.table.get(ins.operands[0], "")),
+                          _type_elems(ins.type)) if ins.operands else 0
+            elif ins.op == "fusion":
+                cm = _CALLS.search(ins.rest)
+                if cm and cm.group(1) in self.comps:
+                    f2, t2, d2 = self._fusion_flops(self.comps[cm.group(1)])
+                    fl += f2
+                    tr += t2
+                    df += d2
+        return fl, tr, df
+
+    @staticmethod
+    def _resolve_to_param(callee: Computation, name: str,
+                          follow_convert: bool = False) -> Optional[str]:
+        """Follow view chains (bitcast/copy/reshape/transpose, + convert for
+        *read*-size corrections — a fused slice-of-convert-of-param only
+        reads the sliced elements; convert must NOT be followed for the DUS
+        in-place aliasing correction, where dtype equality is required)."""
+        ops = ("bitcast", "copy", "reshape", "transpose") + (
+            ("convert",) if follow_convert else ())
+        seen = 0
+        by_name = {i.name: i for i in callee.instrs}
+        while seen < 8:
+            if name in callee.params:
+                return name
+            ins = by_name.get(name)
+            if ins is None or ins.op not in ops or not ins.operands:
+                return None
+            name = ins.operands[0]
+            seen += 1
+        return None
+
+    def _fusion_traffic(self, comp: Computation, ins: Instr,
+                        callee: Computation) -> float:
+        """Post-fusion HBM traffic of a fusion call site, with in-place
+        corrections for dynamic-(update-)slice / gather whose big operand
+        resolves (through view chains) to a fusion parameter."""
+        # default: every fusion operand read once + result written
+        op_bytes = [_type_bytes(comp.table.get(o, "")) for o in ins.operands]
+        result = _type_bytes(ins.type)
+        # corrections keyed by callee parameter index
+        for fin in callee.instrs:
+            if fin.op in ("dynamic-slice", "gather", "slice") and fin.operands:
+                src = self._resolve_to_param(callee, fin.operands[0],
+                                             follow_convert=True)
+                if src is not None:
+                    k = callee.params.index(src)
+                    if k < len(op_bytes):
+                        op_bytes[k] = min(op_bytes[k], _type_bytes(fin.type))
+            elif fin.op == "dynamic-update-slice" and len(fin.operands) >= 2:
+                src = self._resolve_to_param(callee, fin.operands[0])
+                upd_b = _type_bytes(callee.table.get(fin.operands[1], ""))
+                cache_b = _type_bytes(callee.table.get(fin.operands[0], ""))
+                if src is not None:
+                    k = callee.params.index(src)
+                    if k < len(op_bytes):
+                        op_bytes[k] = min(op_bytes[k], upd_b)
+                # the DUS result aliases its buffer operand in-place: replace
+                # the buffer-sized write with an update-sized one
+                if result >= cache_b > 0:
+                    result = result - cache_b + upd_b
+        return float(sum(op_bytes) + result)
+
+    # -- computation walk ---------------------------------------------------
+    def total(self, comp_name: Optional[str] = None) -> CostTotals:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        out = CostTotals()
+        if comp is None:
+            return out
+        self._memo[comp_name] = out  # guard recursion
+        for ins in comp.instrs:
+            if ins.op == "while":
+                tm = _TRIP.search(ins.rest)
+                trip = int(tm.group(1)) if tm else 1
+                if not tm:
+                    out.unknown_trip_loops += 1
+                cb = _COND_BODY.search(ins.rest)
+                if cb:
+                    sub = CostTotals()
+                    sub.add(self.total(cb.group(2)))
+                    sub.add(self.total(cb.group(1)))
+                    out.add(sub.scaled(trip))
+            elif ins.op == "fusion":
+                cm = _CALLS.search(ins.rest)
+                callee = self.comps.get(cm.group(1)) if cm else None
+                if callee is not None:
+                    fl, tr, df = self._fusion_flops(callee)
+                    out.flops += fl
+                    out.dot_flops += df
+                    out.transcendentals += tr
+                    out.traffic_bytes += self._fusion_traffic(comp, ins, callee)
+                    # collectives never appear inside fusions
+            elif ins.op in ("call", "custom-call", "conditional"):
+                cm = _CALLS.search(ins.rest)
+                if cm and cm.group(1) in self.comps:
+                    out.add(self.total(cm.group(1)))
+                out.traffic_bytes += _type_bytes(ins.type)
+            elif ins.op == "dot":
+                d = self._dot_flops(comp, ins)
+                out.flops += d
+                out.dot_flops += d
+                out.traffic_bytes += (_type_bytes(ins.type) + sum(
+                    _type_bytes(comp.table.get(o, "")) for o in ins.operands))
+            elif ins.op == "convolution":
+                out.flops += 2.0 * _type_elems(ins.type) * 1  # window unknown
+                out.traffic_bytes += (_type_bytes(ins.type) + sum(
+                    _type_bytes(comp.table.get(o, "")) for o in ins.operands))
+            elif any(ins.op == c or ins.op == c + "-start"
+                     or ins.op == c + "-done" for c in COLLECTIVES):
+                if ins.op.endswith("-done"):
+                    continue
+                base = next(c for c in COLLECTIVES if ins.op.startswith(c))
+                ob = _type_bytes(ins.type)
+                if ins.op.endswith("-start"):
+                    ob //= 2
+                gm = _GROUPS_IOTA.search(ins.rest)
+                if gm:
+                    group = int(gm.group(2))
+                else:
+                    gl = _GROUPS_LIST.search(ins.rest)
+                    group = len(gl.group(1).split(",")) if gl else 2
+                s = out.collectives.setdefault(
+                    base, {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0})
+                s["count"] += 1
+                s["result_bytes"] += ob
+                s["wire_bytes"] += _wire_bytes(base, ob, group)
+                out.traffic_bytes += 2.0 * ob
+            elif ins.op in ("dynamic-slice", "gather"):
+                out.traffic_bytes += 2.0 * _type_bytes(ins.type)
+            elif ins.op == "dynamic-update-slice":
+                upd = _type_bytes(comp.table.get(ins.operands[1], "")) \
+                    if len(ins.operands) > 1 else 0
+                out.traffic_bytes += 2.0 * upd
+            elif ins.op in ("copy", "transpose", "reshape", "broadcast",
+                            "concatenate", "pad", "slice", "reverse",
+                            "reduce", "sort", "scatter", "select-and-scatter",
+                            "reduce-window", "iota", "rng", "rng-bit-generator",
+                            "convert", "select") or ins.op in _ELEMENTWISE \
+                    or ins.op in _TRANSCENDENTAL:
+                tb = _type_bytes(ins.type) + sum(
+                    _type_bytes(comp.table.get(o, "")) for o in ins.operands)
+                out.traffic_bytes += tb
+                if ins.op in _ELEMENTWISE:
+                    out.flops += _type_elems(ins.type)
+                elif ins.op in _TRANSCENDENTAL:
+                    out.transcendentals += _type_elems(ins.type)
+                elif ins.op == "reduce" and ins.operands:
+                    out.flops += _type_elems(comp.table.get(ins.operands[0], ""))
+        self._memo[comp_name] = out
+        return out
+
+
+def analyze(text: str) -> Dict:
+    """Loop-corrected totals for the entry computation (per device, per
+    execution)."""
+    hc = HloCost(text)
+    t = hc.total()
+    return {
+        "flops": t.flops,
+        "dot_flops": t.dot_flops,
+        "transcendentals": t.transcendentals,
+        "traffic_bytes": t.traffic_bytes,
+        "collectives": t.collectives,
+        "collective_wire_bytes": sum(
+            s["wire_bytes"] for s in t.collectives.values()),
+        "unknown_trip_loops": t.unknown_trip_loops,
+    }

@@ -1,0 +1,109 @@
+"""Abstract input/state specs shared by the dry-run and the launchers.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given cell — weak-type-correct, shardable, no device
+allocation.  ``abstract_train_state`` / ``abstract_serve_state`` do the same
+for the train state and the serve caches, together with the logical-axes
+trees the resolver consumes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.optim.adamw import OptConfig, TrainState
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train" or shape.kind == "prefill":
+        if cfg.frontend == "encodec_stub":
+            toks = SDS((B, S, cfg.n_codebooks), jnp.int32)
+        else:
+            toks = SDS((B, S), jnp.int32)
+        out = {"tokens": toks}
+        if cfg.frontend == "vit_stub":
+            out["patches"] = SDS((B, cfg.n_patches, cfg.d_model), jnp.float32)
+        return out
+    if shape.kind == "decode":
+        if cfg.frontend == "encodec_stub":
+            tok = SDS((B, 1, cfg.n_codebooks), jnp.int32)
+        else:
+            tok = SDS((B, 1), jnp.int32)
+        return {"token": tok, "pos": SDS((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Tuple]:
+    if shape.kind in ("train", "prefill"):
+        ax = {"tokens": ("batch", "seq", None)[: 3 if cfg.frontend == "encodec_stub" else 2]}
+        if cfg.frontend == "vit_stub":
+            ax["patches"] = ("batch", None, None)
+        return ax
+    return {"token": ("batch", None, None)[: 3 if cfg.frontend == "encodec_stub" else 2],
+            "pos": ()}
+
+
+def abstract_params(cfg: ModelConfig):
+    return T.init_abstract(cfg)
+
+
+def abstract_params_unstacked(cfg: ModelConfig):
+    """Per-layer (unstacked) weights for the unrolled decode path: no
+    whole-stack buffer ever exists on device (see §Perf cell C — the CPU
+    backend's bf16-dot conversion otherwise materializes f32 copies of the
+    full stacked expert weights)."""
+    params, axes = T.init_abstract(cfg)
+    blocks = params["blocks"]
+    n = jax.tree.leaves(blocks)[0].shape[0]
+    params = dict(params)
+    axes = dict(axes)
+    params["blocks"] = [
+        jax.tree.map(lambda t: SDS(t.shape[1:], t.dtype), blocks)
+        for _ in range(n)
+    ]
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    inner_axes = jax.tree.map(lambda ax: ax[1:], axes["blocks"], is_leaf=is_ax)
+    axes["blocks"] = [inner_axes] * n
+    return params, axes
+
+
+def abstract_train_state(cfg: ModelConfig, opt: OptConfig):
+    params, axes = T.init_abstract(cfg)
+    mdt = jnp.dtype(opt.moment_dtype)
+    mom = jax.tree.map(lambda p: SDS(p.shape, mdt), params)
+    state = TrainState(step=SDS((), jnp.int32), params=params,
+                       mu=mom, nu=jax.tree.map(lambda x: x, mom))
+    axes_state = TrainState(step=(), params=axes, mu=axes, nu=axes)
+    return state, axes_state
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """(cache ShapeDtypeStructs, logical axes) without allocation."""
+    captured = {}
+
+    def build():
+        c, a = T.init_cache(cfg, batch, max_seq)
+        captured["axes"] = a
+        return c
+
+    shapes = jax.eval_shape(build)
+    return shapes, captured["axes"]
+
+
+def state_shardings(resolver, state_abstract, axes_state):
+    """Map the resolver over a (possibly nested) abstract state."""
+    def one(leaf, ax):
+        return resolver.sharding(ax, leaf.shape, param=True)
+    return jax.tree.map(
+        lambda ax, leaf: resolver.sharding(ax, leaf.shape, param=True),
+        axes_state, state_abstract,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

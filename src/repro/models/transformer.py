@@ -1,0 +1,450 @@
+"""Unified decoder LM covering all ten assigned architectures.
+
+The stack is ``embed -> [pre_blocks] -> scan(super-blocks) -> norm -> head``.
+A *super-block* is the repeating period of ``cfg.block_period`` layers (1 for
+uniform stacks; 8 for jamba's attn:mamba 1:7 + MoE-every-2 pattern); its
+parameters are stacked over ``n_blocks`` and the stack is a single
+``jax.lax.scan`` (rematerialized for training) so the HLO stays compact
+enough for the 512-way GSPMD compile.
+
+Modalities: ``vlm`` consumes precomputed patch embeddings for the first
+``n_patches`` positions (frontend stub per the assignment); ``audio`` embeds
+``n_codebooks`` parallel EnCodec token streams (summed) and predicts all
+codebooks per step.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ModelConfig, layer_idx: int, key, dtype):
+    kmix, kmlp, kn = jax.random.split(key, 3)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), dtype),
+                 "ln2": jnp.ones((cfg.d_model,), dtype)}
+    a: Params = {"ln1": ("d_model",), "ln2": ("d_model",)}
+    mix = cfg.mixer_kind(layer_idx)
+    if mix == "attn":
+        sub = L.mla_init if cfg.attn_kind == "mla" else L.gqa_init
+        p["mixer"], a["mixer"] = sub(cfg, kmix, dtype)
+    else:
+        p["mixer"], a["mixer"] = L.mamba_init(cfg, kmix, dtype)
+    if cfg.mlp_kind(layer_idx) == "moe":
+        p["mlp"], a["mlp"] = L.moe_init(cfg, kmlp, dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"], a["mlp"] = L.mlp_init(cfg, kmlp, dtype)
+    else:
+        # pure-Mamba blocks (falcon-mamba) have no MLP: drop ln2 as well
+        del p["ln2"], a["ln2"]
+    return p, a
+
+
+def _block_init(cfg: ModelConfig, block_start: int, key, dtype):
+    P = cfg.block_period
+    p, a = {}, {}
+    for i in range(P):
+        p[f"sub{i}"], a[f"sub{i}"] = _layer_init(cfg, block_start + i,
+                                                 jax.random.fold_in(key, i), dtype)
+    return p, a
+
+
+def init_params(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    """Returns (params, logical_axes) with identical tree structure."""
+    cfg.validate()
+    dtype = _dtype(cfg)
+    kE, kB, kH, kP = jax.random.split(key, 4)
+    p: Params = {}
+    a: Params = {}
+    if cfg.frontend == "encodec_stub":
+        p["embed"] = L._dense_init(kE, (cfg.n_codebooks, cfg.vocab_size,
+                                        cfg.d_model), dtype, scale=0.02)
+        a["embed"] = (None, "vocab", "d_model")
+    else:
+        p["embed"] = L._dense_init(kE, (cfg.vocab_size, cfg.d_model), dtype,
+                                   scale=0.02)
+        a["embed"] = ("vocab", "d_model")
+    # leading dense layers (outside the scan), e.g. deepseek first_dense=1
+    pre = []
+    pre_a = []
+    for i in range(cfg.moe.first_dense):
+        lp, la = _layer_init(cfg, i, jax.random.fold_in(kP, i), dtype)
+        pre.append(lp)
+        pre_a.append(la)
+    if pre:
+        p["pre_blocks"] = pre
+        a["pre_blocks"] = pre_a
+    # stacked super-blocks
+    P = cfg.block_period
+    n_blocks = (cfg.n_layers - cfg.moe.first_dense) // P
+    blocks = []
+    block_axes = None
+    for b in range(n_blocks):
+        bp, ba = _block_init(cfg, cfg.moe.first_dense + b * P,
+                             jax.random.fold_in(kB, b), dtype)
+        blocks.append(bp)
+        block_axes = ba
+    p["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    a["blocks"] = jax.tree.map(lambda ax: (None,) + ax, block_axes,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    p["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    a["final_norm"] = ("d_model",)
+    if not cfg.tie_embeddings:
+        out_dim = cfg.vocab_size * (cfg.n_codebooks
+                                    if cfg.frontend == "encodec_stub" else 1)
+        p["lm_head"] = L._dense_init(kH, (cfg.d_model, out_dim), dtype)
+        a["lm_head"] = ("d_model", "vocab")
+    return p, a
+
+
+def init_abstract(cfg: ModelConfig):
+    """(ShapeDtypeStruct params, logical axes) without allocation.  The axes
+    tree is static python, captured by closure during the abstract trace."""
+    captured = {}
+
+    def build():
+        p, a = init_params(cfg, jax.random.PRNGKey(0))
+        captured["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(build)
+    return shapes, captured["axes"]
+
+
+def param_count(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total_params, active_params) — `active` discounts routed experts to
+    the activated fraction (top_k/n_routed) and drops the input embedding
+    gather, for the 6·N_active·D useful-FLOPs estimate."""
+    params, _ = init_abstract(cfg)
+    total = sum(int(np_prod(x.shape)) for x in jax.tree.leaves(params))
+    routed = 0
+
+    def walk(t):
+        nonlocal routed
+        if isinstance(t, dict):
+            if "router" in t:  # an MoE mlp subtree
+                for k in ("w_gate", "w_up", "w_down"):
+                    routed += int(np_prod(t[k].shape))
+            for v in t.values():
+                if isinstance(v, (dict, list)):
+                    walk(v)
+        elif isinstance(t, list):
+            for v in t:
+                walk(v)
+
+    walk(params)
+    if cfg.moe.n_routed:
+        active = total - routed + routed * cfg.moe.top_k / cfg.moe.n_routed
+    else:
+        active = total
+    emb = int(np_prod(params["embed"].shape))
+    return total, int(active - emb)
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens, patches=None):
+    if cfg.frontend == "encodec_stub":
+        # tokens: (B, S, n_codebooks)
+        x = 0.
+        for cb in range(cfg.n_codebooks):
+            x = x + jnp.take(params["embed"][cb], tokens[..., cb], axis=0)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vit_stub" and patches is not None:
+        npatch = patches.shape[1]
+        x = jnp.concatenate([patches.astype(x.dtype), x[:, npatch:]], axis=1)
+    return x
+
+
+def lm_head(cfg: ModelConfig, params: Params, x):
+    if cfg.tie_embeddings:
+        w = params["embed"]
+        if cfg.frontend == "encodec_stub":
+            w = w.reshape(-1, cfg.d_model)
+        logits = x @ w.T
+    else:
+        logits = x @ params["lm_head"]
+    if cfg.frontend == "encodec_stub":
+        logits = logits.reshape(logits.shape[:-1]
+                                + (cfg.n_codebooks, cfg.vocab_size))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, lp: Params, layer_idx: int, x, positions,
+                 res, cache=None, pos=None, decode=False):
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    mix = cfg.mixer_kind(layer_idx)
+    mc = cache.get("mixer") if cache is not None else None
+    if mix == "attn":
+        fn = L.mla_apply if cfg.attn_kind == "mla" else L.gqa_apply
+        h, new_mc = fn(cfg, lp["mixer"], h, positions, res=res,
+                       cache=mc, pos=pos)
+    else:
+        h, new_mc = L.mamba_apply(cfg, lp["mixer"], h, res=res,
+                                  cache=mc, decode=decode)
+    x = x + h
+    if "mlp" in lp:
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.mlp_kind(layer_idx) == "moe":
+            h, a = L.moe_apply(cfg, lp["mlp"], h, res=res)
+            aux = aux + a
+        else:
+            h = L.mlp_apply(cfg, lp["mlp"], h, res=res)
+        x = x + h
+    new_cache = {"mixer": new_mc} if cache is not None else None
+    return x, aux, new_cache
+
+
+def _apply_block(cfg: ModelConfig, bp: Params, x, positions, res,
+                 cache=None, pos=None, decode=False):
+    P = cfg.block_period
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+    for i in range(P):
+        li = cfg.moe.first_dense + i   # periodic kinds: representative index
+        lc = cache.get(f"sub{i}") if cache is not None else None
+        x, a, nc = _apply_layer(cfg, bp[f"sub{i}"], li, x, positions, res,
+                                cache=lc, pos=pos, decode=decode)
+        aux = aux + a
+        if new_cache is not None:
+            new_cache[f"sub{i}"] = nc
+    return x, aux, new_cache
+
+
+def _auto_groups(n_blocks: int) -> int:
+    """Largest divisor of n_blocks that is <= sqrt(n_blocks)."""
+    g = 1
+    d = 1
+    while d * d <= n_blocks:
+        if n_blocks % d == 0:
+            g = d
+        d += 1
+    return g
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    if cfg.remat_policy == "everything":
+        return jax.checkpoint_policies.everything_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, patches=None,
+            res=None, remat: bool = True):
+    """Training/scoring forward. tokens: (B,S) int32 (or (B,S,CB) audio).
+    Returns (logits, aux_loss)."""
+    x = embed_tokens(cfg, params, tokens, patches)
+    x = constrain(x, res, ("batch", "seq", None))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def block_fn(x, bp):
+        y, aux, _ = _apply_block(cfg, bp, x, positions, res)
+        return y, aux
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for lp in params.get("pre_blocks", []):
+        li = 0
+        x, a, _ = _apply_layer(cfg, lp, li, x, positions, res)
+        aux_total = aux_total + a
+    body = block_fn
+    if remat and cfg.remat_inner != "none":
+        body = jax.checkpoint(block_fn, policy=_remat_policy(cfg),
+                              prevent_cse=False)
+
+    def scan_body(carry, bp):
+        x, aux = carry
+        y, a = body(x, bp)
+        return (y, aux + a), None
+
+    blocks = params["blocks"]
+    n_blocks = jax.tree.leaves(blocks)[0].shape[0]
+    G = cfg.remat_groups or _auto_groups(n_blocks)
+    if remat and G > 1 and n_blocks % G == 0:
+        # two-level remat: only G group-boundary activations are saved;
+        # each group's interior is recomputed during its backward segment
+        seg = n_blocks // G
+        grouped = jax.tree.map(
+            lambda t: t.reshape((G, seg) + t.shape[1:]), blocks)
+
+        def group_body(carry, gp):
+            out, _ = jax.lax.scan(scan_body, carry, gp)
+            return out, None
+
+        outer = jax.checkpoint(group_body, policy=_remat_policy(cfg),
+                               prevent_cse=False)
+        (x, aux_total), _ = jax.lax.scan(outer, (x, aux_total), grouped)
+    else:
+        (x, aux_total), _ = jax.lax.scan(scan_body, (x, aux_total), blocks)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(cfg, params, x)
+    logits = constrain(logits, res, ("batch", "seq", None)
+                       if cfg.frontend != "encodec_stub"
+                       else ("batch", "seq", None, None))
+    return logits, aux_total
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Returns (cache, logical_axes) pytrees.  With ``decode_unroll`` the
+    per-block caches are an UNSTACKED list (so donation aliases each buffer
+    in place during decode); otherwise stacked over n_blocks for the scan."""
+    dtype = _dtype(cfg)
+
+    def layer_cache(layer_idx):
+        mix = cfg.mixer_kind(layer_idx)
+        if mix == "attn":
+            sub = L.mla_cache_init if cfg.attn_kind == "mla" else L.gqa_cache_init
+            c, a = sub(cfg, batch, max_seq, dtype)
+        else:
+            c, a = L.mamba_cache_init(cfg, batch, dtype)
+        return {"mixer": c}, {"mixer": a}
+
+    P = cfg.block_period
+    n_blocks = (cfg.n_layers - cfg.moe.first_dense) // P
+    bc, ba = {}, {}
+    for i in range(P):
+        bc[f"sub{i}"], ba[f"sub{i}"] = layer_cache(cfg.moe.first_dense + i)
+    if cfg.decode_unroll:
+        cache = {"blocks": [jax.tree.map(lambda x: jnp.array(x), bc)
+                            for _ in range(n_blocks)]}
+        axes = {"blocks": [ba] * n_blocks}
+    else:
+        cache = {"blocks": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_blocks,) + x.shape), bc)}
+        axes = {"blocks": jax.tree.map(lambda ax: (None,) + ax, ba,
+                                       is_leaf=lambda x: isinstance(x, tuple))}
+    pre_c, pre_a = [], []
+    for i in range(cfg.moe.first_dense):
+        c, a = layer_cache(i)
+        pre_c.append(c)
+        pre_a.append(a)
+    if pre_c:
+        cache["pre_blocks"] = pre_c
+        axes["pre_blocks"] = pre_a
+    return cache, axes
+
+
+def _with_cache_scan(cfg, params, cache, x, positions, res, pos, decode):
+    aux = jnp.zeros((), jnp.float32)
+    new_pre = []
+    for i, lp in enumerate(params.get("pre_blocks", [])):
+        x, a, nc = _apply_layer(cfg, lp, i, x, positions, res,
+                                cache=cache["pre_blocks"][i], pos=pos,
+                                decode=decode)
+        new_pre.append(nc)
+        aux = aux + a
+
+    if isinstance(cache["blocks"], list) and decode:
+        # unrolled decode: per-block caches are separate (donatable) buffers
+        # -> in-place updates, no scan-carry double buffering;
+        # params stay stacked — static slices are read-only views.  The
+        # optimization barrier pins the per-layer slice: without it the CPU
+        # backend's bf16-dot f32-conversion gets hoisted above the slice and
+        # materializes f32 copies of the ENTIRE weight stack (dbrx-132b:
+        # 3x 9.8 GiB per layer; §Perf cell C).
+        blocks_p = params["blocks"]
+        new_blocks = []
+        for i, bc in enumerate(cache["blocks"]):
+            if isinstance(blocks_p, list):
+                bp = blocks_p[i]     # unstacked serving weights (preferred)
+            else:
+                bp = jax.tree.map(lambda t: t[i], blocks_p)
+            # tie this layer's weights to the running activation: otherwise
+            # the scheduler hoists every layer's (CPU-backend) bf16->f32
+            # weight conversion to the front and keeps them all live at once
+            bp, x = jax.lax.optimization_barrier((bp, x))
+            x, a, nc = _apply_block(cfg, bp, x, positions, res,
+                                    cache=bc, pos=pos, decode=decode)
+            new_blocks.append(nc)
+    else:
+        blocks_cache = cache["blocks"]
+        blocks_p = params["blocks"]
+        unstack = False
+        if isinstance(blocks_cache, list):
+            # prefill with unrolled-style caches: stack for the scan
+            blocks_cache = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *blocks_cache)
+            unstack = True
+        if isinstance(blocks_p, list):   # unstacked serving weights
+            blocks_p = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks_p)
+
+        def scan_body(x, xs):
+            bp, bc = xs
+            y, a, nc = _apply_block(cfg, bp, x, positions, res,
+                                    cache=bc, pos=pos, decode=decode)
+            return y, nc
+
+        x, new_blocks = jax.lax.scan(scan_body, x,
+                                     (blocks_p, blocks_cache))
+        if unstack:
+            n = len(cache["blocks"])
+            new_blocks = [jax.tree.map(lambda t: t[i], new_blocks)
+                          for i in range(n)]
+    new_cache = {"blocks": new_blocks}
+    if new_pre:
+        new_cache["pre_blocks"] = new_pre
+    return x, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, cache, *,
+            patches=None, res=None):
+    """Fill the cache with the prompt; returns (logits_last, new_cache)."""
+    x = embed_tokens(cfg, params, tokens, patches)
+    x = constrain(x, res, ("batch", "seq", None))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    x, new_cache = _with_cache_scan(cfg, params, cache, x, positions, res,
+                                    pos=None, decode=False)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(cfg, params, x[:, -1:])
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache, pos, *,
+                res=None):
+    """One decode step. token: (B,1) int32 (or (B,1,CB)); pos: () int32.
+    Returns (logits, new_cache)."""
+    x = embed_tokens(cfg, params, token)
+    positions = jnp.full((1,), pos)
+    x, new_cache = _with_cache_scan(cfg, params, cache, x, positions, res,
+                                    pos=pos, decode=True)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(cfg, params, x)
+    return logits, new_cache

@@ -1,0 +1,52 @@
+"""Gradient compression for the slow cross-pod hop (DCN), with error
+feedback.
+
+At 1000+ node scale the intra-pod reduce-scatter runs at ICI speed but the
+pod-level all-reduce crosses the datacenter network.  int8 quantization with
+per-tensor scales cuts that traffic 4x (vs f32 accumulators) / 2x (vs bf16);
+the residual is carried to the next step (error feedback, Seide et al. '14),
+which keeps SGD/Adam convergence intact.
+
+The transform is pure-JAX and composes with any step function:
+
+    g_q, new_err = compress_decompress(g + err)
+
+In a multi-controller deployment ``quantize`` runs before the ``psum`` over
+the ``pod`` axis and ``dequantize`` after; in the single-program GSPMD
+lowering used here we emulate by quantize->dequantize around the grad use —
+the roundtrip error (and hence the convergence behaviour) is identical, and
+the wire-format saving is recorded in the roofline collective term by
+scaling the pod-axis collective bytes (see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _q_leaf(g, err):
+    g32 = g.astype(jnp.float32) + (err.astype(jnp.float32) if err is not None else 0.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = g32 - deq
+    return deq.astype(g.dtype), new_err.astype(jnp.bfloat16)
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+def compress_decompress(grads, err) -> Tuple[Any, Any]:
+    """Returns (dequantized grads, new error-feedback buffers)."""
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(err) if err is not None else [None] * len(flat_g)
+    out = [_q_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out])
+
+
+def wire_bytes_saved_fraction() -> float:
+    """int8 payload vs bf16 wire format across the pod axis."""
+    return 0.5

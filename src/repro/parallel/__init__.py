@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    ShardingResolver,
+    constrain,
+    shapes_of,
+)

@@ -1,0 +1,152 @@
+"""Logical-axis sharding resolver.
+
+Every parameter / activation in the framework is annotated with a tuple of
+*logical* axis names (``("vocab", "d_model")`` …).  The resolver maps logical
+names to mesh axes through an ordered rule table with **divisibility
+fallbacks**: a rule is only taken if the mesh-axis product divides the dim
+size and none of its mesh axes is already used by another dim of the same
+tensor.  This is what lets one rule table serve all ten assigned archs —
+e.g. internvl2's 14 heads or 151655 vocab simply fall through to the next
+candidate (or replication) instead of crashing the partitioner.
+
+FSDP: for parameters we additionally shard the largest still-unsharded dim
+over the ``data`` (and ``pod``) axes — ZeRO-3 style — when the config asks
+for it.  XLA/GSPMD inserts the per-layer all-gathers inside the layer scan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Candidate mesh-axis tuples per logical axis, in preference order.  An empty
+# tuple means "replicate" and always succeeds.
+Rules = Dict[str, List[Tuple[str, ...]]]
+
+# Priority: lower = resolved first (gets first pick of mesh axes).
+_PRIORITY = {
+    "batch": 0,
+    "experts": 1,
+    "heads": 2,
+    "d_ff": 2,
+    "d_inner": 2,
+    "vocab": 3,
+    "kv_heads": 4,
+    "kv_seq": 5,
+    "seq": 6,
+    "d_model": 8,       # last-resort TP dim (row-parallel fallback)
+    "capacity": 7,
+}
+
+DEFAULT_RULES: Rules = {
+    "batch":    [("pod", "data"), ("data",)],
+    "experts":  [("model",)],
+    "heads":    [("model",)],
+    "kv_heads": [("model",)],
+    "d_ff":     [("model",)],
+    "d_inner":  [("model",)],
+    "vocab":    [("model",)],
+    "kv_seq":   [("model",)],       # GQA caches: few kv heads -> shard time axis
+    "seq":      [("data",)],        # SP once batch can't use it (e.g. batch=1)
+    "capacity": [("pod", "data"), ("data",)],  # MoE (E,C,d) buffers
+    "d_model":  [],                 # replicated by default (see FSDP below)
+}
+
+# Param dims eligible for the FSDP (ZeRO-3) extra shard, tried in this order.
+_FSDP_AXES = [("data",), ("pod", "data"), ("pod",)]
+_FSDP_ELIGIBLE = ("d_model", "d_ff", "d_inner", "vocab", "experts_inner",
+                  "heads_flat", "kv_lora", "conv", "dt_rank", "d_state_in")
+
+
+def _axes_size(mesh_shape: Dict[str, int], axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh_shape[a]
+    return n
+
+
+@dataclass
+class ShardingResolver:
+    mesh: Mesh
+    rules: Rules = field(default_factory=lambda: dict(DEFAULT_RULES))
+    fsdp: bool = False              # extra data-axis shard on params
+
+    def _mesh_shape(self) -> Dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    # ------------------------------------------------------------------
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Sequence[int], *, param: bool = False) -> P:
+        """Resolve one tensor's logical axes to a PartitionSpec."""
+        ms = self._mesh_shape()
+        n = len(logical)
+        assert n == len(shape), (logical, shape)
+        assign: List[Optional[Tuple[str, ...]]] = [None] * n
+        used: set = set()
+        order = sorted(range(n), key=lambda i: _PRIORITY.get(logical[i] or "", 99))
+        for i in order:
+            name = logical[i]
+            if name is None:
+                continue
+            for cand in self.rules.get(name, []):
+                if not cand:
+                    break
+                if any(a in used or a not in ms for a in cand):
+                    continue
+                if shape[i] % _axes_size(ms, cand) != 0:
+                    continue
+                assign[i] = cand
+                used.update(cand)
+                break
+        if param and self.fsdp:
+            self._apply_fsdp(logical, shape, assign, used, ms)
+        return P(*[a if a is None else (a[0] if len(a) == 1 else a) for a in assign])
+
+    def _apply_fsdp(self, logical, shape, assign, used, ms) -> None:
+        # Shard the largest eligible unsharded dim over the data axes.
+        cands = [i for i in range(len(shape))
+                 if assign[i] is None and (logical[i] in _FSDP_ELIGIBLE
+                                           or logical[i] == "d_model")]
+        cands.sort(key=lambda i: -shape[i])
+        for i in cands:
+            for axes in _FSDP_AXES:
+                if any(a in used or a not in ms for a in axes):
+                    continue
+                if shape[i] % _axes_size(ms, axes) != 0:
+                    continue
+                assign[i] = axes
+                used.update(axes)
+                return
+
+    # ------------------------------------------------------------------
+    def sharding(self, logical, shape, *, param: bool = False) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape, param=param))
+
+    def tree_specs(self, logical_tree, shape_tree, *, param: bool = False):
+        """Map ``spec`` over parallel pytrees of logical axes and shapes."""
+        return jax.tree.map(
+            lambda lg, sh: self.spec(lg, sh, param=param),
+            logical_tree, shape_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x),
+        )
+
+    def tree_shardings(self, logical_tree, shape_tree, *, param: bool = False):
+        specs = self.tree_specs(logical_tree, shape_tree, param=param)
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, resolver: Optional[ShardingResolver], logical: Tuple[Optional[str], ...]):
+    """with_sharding_constraint via the resolver (no-op when resolver is None)."""
+    if resolver is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, resolver.sharding(logical, x.shape))
+
+
+def shapes_of(tree):
+    return jax.tree.map(lambda x: tuple(x.shape), tree)

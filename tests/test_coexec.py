@@ -1,0 +1,136 @@
+"""Co-execution integration: the threaded Engine on real kernels and the
+discrete-event simulator (paper-system behaviour)."""
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core import programs as P
+from repro.core.device import DeviceGroup
+from repro.core.runtime import Engine
+from repro.core.simulate import SimConfig, SimDevice, simulate, \
+    single_device_time
+
+
+def devices3():
+    return [DeviceGroup("cpu", throttle=3.0), DeviceGroup("igpu", throttle=1.5),
+            DeviceGroup("gpu", throttle=1.0)]
+
+
+@pytest.mark.parametrize("sched", ["static", "static_rev", "dynamic",
+                                   "hguided", "hguided_opt"])
+def test_engine_output_exact(sched):
+    kw = {"n_packets": 8} if sched == "dynamic" else {}
+    prog = P.PROGRAMS["binomial"](n_options=4096)
+    ref = P.reference_output("binomial", n_options=4096)
+    eng = Engine(prog, devices3(), scheduler=sched, scheduler_kwargs=kw)
+    res = eng.run()
+    np.testing.assert_allclose(res.output, ref, rtol=1e-5, atol=1e-5)
+    assert res.total_time > 0
+    assert res.binary_time >= res.total_time
+
+
+def test_engine_device_failure_absorbed():
+    # h=1024 -> 8 work-groups: every device's static chunk is non-empty
+    prog = P.PROGRAMS["gaussian"](h=1024, w=128)
+    ref = P.reference_output("gaussian", h=1024, w=128)
+    devs = devices3()
+    devs[2].fail_after = 0          # gpu dies on its first packet
+    # static: the gpu's chunk is pre-assigned, so the failure (and its
+    # requeue) is deterministic regardless of thread scheduling
+    eng = Engine(prog, devs, scheduler="static")
+    res = eng.run()
+    assert res.aborted_devices == 1
+    np.testing.assert_allclose(res.output, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_all_fail_raises():
+    prog = P.PROGRAMS["gaussian"](h=256, w=128)
+    devs = devices3()
+    for d in devs:
+        d.fail_after = 0
+    eng = Engine(prog, devs, scheduler="dynamic",
+                 scheduler_kwargs={"n_packets": 8})
+    with pytest.raises(RuntimeError):
+        eng.run()
+
+
+def test_engine_elastic_membership():
+    prog = P.PROGRAMS["binomial"](n_options=2048)
+    ref = P.reference_output("binomial", n_options=2048)
+    eng = Engine(prog, devices3()[:2], scheduler="hguided_opt")
+    r1 = eng.run()
+    eng.add_device(DeviceGroup("late", throttle=1.0))
+    r2 = eng.run()
+    np.testing.assert_allclose(r2.output, ref, rtol=1e-5, atol=1e-5)
+    assert len(r2.device_busy) == 3
+    eng.remove_device("late")
+    r3 = eng.run()
+    assert len(r3.device_busy) == 2
+    np.testing.assert_allclose(r3.output, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_executable_cache_reused():
+    prog = P.PROGRAMS["binomial"](n_options=2048)
+    eng = Engine(prog, devices3(), scheduler="hguided_opt",
+                 init_cost_s=0.05)
+    eng.run()
+    t0 = __import__("time").perf_counter()
+    eng.run()
+    warm = __import__("time").perf_counter() - t0
+    # the 3 x 50 ms init costs must not be paid again
+    assert warm < 10.0
+    assert len(eng._compiled) == 3
+
+
+# ----------------------------------------------------------- simulator
+def sim_devs():
+    return [SimDevice("cpu", 100.0, jitter=0.05, zero_copy=True),
+            SimDevice("igpu", 300.0, jitter=0.05, zero_copy=True),
+            SimDevice("gpu", 700.0, jitter=0.05)]
+
+
+def test_sim_hguided_beats_static_under_bias():
+    devs = sim_devs()
+    for d, b in zip(devs, (1.5, 0.8, 1.0)):
+        d.profile_bias = b
+    t = {}
+    for sched in ("static", "hguided"):
+        cfg = SimConfig(scheduler=sched, opt_init=True, opt_buffers=True)
+        t[sched] = simulate(4096, 8, devs, cfg).total_time
+    assert t["hguided"] < t["static"]
+
+
+def test_sim_balance_near_one_for_hguided():
+    cfg = SimConfig(scheduler="hguided", opt_init=True, opt_buffers=True)
+    r = simulate(8192, 8, sim_devs(), cfg)
+    assert M.balance(r) > 0.9
+
+
+def test_sim_failure_requeues():
+    devs = sim_devs()
+    devs[2].fail_at = 0.5
+    cfg = SimConfig(scheduler="hguided", opt_init=True, opt_buffers=True)
+    r = simulate(8192, 8, devs, cfg)
+    assert r.aborted_devices == 1
+    covered = sum(p.size for p in r.packets)
+    assert covered == 8192
+
+
+def test_sim_straggler_absorbed():
+    devs = sim_devs()
+    devs[2].straggle_at = 0.2
+    devs[2].straggle_factor = 0.3
+    cfg_h = SimConfig(scheduler="hguided", opt_init=True, opt_buffers=True)
+    cfg_s = SimConfig(scheduler="static", opt_init=True, opt_buffers=True)
+    th = simulate(8192, 8, devs, cfg_h).total_time
+    ts = simulate(8192, 8, devs, cfg_s).total_time
+    assert th < ts        # guided tail reroutes around the straggler
+
+
+def test_sim_efficiency_metrics_consistent():
+    devs = sim_devs()
+    cfg = SimConfig(scheduler="hguided_opt", opt_init=True, opt_buffers=True)
+    singles = [single_device_time(8192, 8, d, cfg) for d in devs]
+    r = simulate(8192, 8, devs, cfg)
+    eff = M.efficiency(min(singles), r.total_time, singles)
+    assert 0 < eff <= 1.05

@@ -1,0 +1,58 @@
+"""Metric definitions (paper §IV)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as M
+from repro.core.metrics import RunResult
+
+
+def rr(finish):
+    return RunResult(total_time=max(finish), device_busy=list(finish),
+                     device_finish=list(finish), packets=[])
+
+
+def test_balance_perfect():
+    assert M.balance(rr([2.0, 2.0, 2.0])) == 1.0
+
+
+def test_balance_imbalanced():
+    assert M.balance(rr([1.0, 4.0])) == pytest.approx(0.25)
+
+
+def test_smax_example():
+    # T = (10, 5, 2): powers (0.1, 0.2, 0.5) -> smax = 0.8/0.5 = 1.6
+    assert M.s_max_from_times([10, 5, 2]) == pytest.approx(1.6)
+
+
+def test_efficiency_perfect_coexec():
+    singles = [10.0, 5.0, 2.0]
+    ideal = 1.0 / sum(1.0 / t for t in singles)
+    eff = M.efficiency(2.0, ideal, singles)
+    assert eff == pytest.approx(1.0)
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_efficiency_bounded(singles):
+    ideal = 1.0 / sum(1.0 / t for t in singles)
+    eff = M.efficiency(min(singles), ideal, singles)
+    assert eff == pytest.approx(1.0, rel=1e-6)
+    # any slower co-exec time gives eff < 1
+    assert M.efficiency(min(singles), ideal * 1.5, singles) < 1.0
+
+
+def test_inflection_interpolation():
+    sizes = [10, 20, 30]
+    co = [5.0, 3.0, 1.0]
+    single = [2.0, 2.5, 3.0]
+    x = M.inflection_point(sizes, co, single)
+    assert 20 < x < 30
+
+
+def test_inflection_none_when_never_crossing():
+    assert M.inflection_point([1, 2], [5, 5], [1, 1]) is None
+
+
+def test_geomean():
+    assert M.geomean([1.0, 4.0]) == pytest.approx(2.0)
+    assert M.geomean([]) == 0.0

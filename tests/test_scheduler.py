@@ -1,0 +1,178 @@
+"""Scheduler unit + property tests (the paper's §II-B invariants)."""
+import math
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (DeviceProfile, DynamicScheduler,
+                                  HGuidedOptScheduler, HGuidedScheduler,
+                                  StaticScheduler, make_scheduler,
+                                  tuned_profiles)
+
+
+def drain(sched, n_dev):
+    """Round-robin drain; returns per-device packet lists."""
+    out = {i: [] for i in range(n_dev)}
+    active = set(range(n_dev))
+    while active:
+        for i in list(active):
+            pkt = sched.next_packet(i)
+            if pkt is None:
+                active.discard(i)
+            else:
+                out[i].append(pkt)
+    return out
+
+
+def coverage_ok(packets, total):
+    """Every work-group covered exactly once."""
+    ivs = sorted((p.offset, p.offset + p.size) for p in packets)
+    pos = 0
+    for a, b in ivs:
+        if a != pos:
+            return False
+        pos = b
+    return pos == total
+
+
+DEVICES3 = [DeviceProfile("cpu", 1.0), DeviceProfile("igpu", 3.0),
+            DeviceProfile("gpu", 7.0)]
+
+
+@pytest.mark.parametrize("name", ["static", "static_rev", "dynamic",
+                                  "hguided", "hguided_opt"])
+def test_exactly_once_coverage(name):
+    sched = make_scheduler(name, 1000, 8, [DeviceProfile(d.name, d.power)
+                                           for d in DEVICES3])
+    out = drain(sched, 3)
+    allp = [p for ps in out.values() for p in ps]
+    assert coverage_ok(allp, 1000)
+
+
+@given(total=st.integers(1, 5000), lws=st.integers(1, 64),
+       powers=st.lists(st.floats(0.05, 10.0), min_size=1, max_size=9),
+       name=st.sampled_from(["static", "static_rev", "dynamic", "hguided",
+                             "hguided_opt"]))
+@settings(max_examples=120, deadline=None)
+def test_property_coverage_and_alignment(total, lws, powers, name):
+    devs = [DeviceProfile(f"d{i}", p) for i, p in enumerate(powers)]
+    sched = make_scheduler(name, total, lws, devs)
+    out = drain(sched, len(devs))
+    allp = [p for ps in out.values() for p in ps]
+    assert coverage_ok(allp, total)
+    # all packets except per-device finals are lws-aligned in size
+    for p in allp:
+        assert p.size > 0
+        if p.offset + p.size != total:
+            assert p.size % lws == 0 or p.size == total
+
+
+def test_hguided_formula_first_packet():
+    G, lws = 10000, 10
+    devs = [DeviceProfile("a", 2.0, min_mult=1, k=2.0),
+            DeviceProfile("b", 6.0, min_mult=1, k=2.0)]
+    sched = HGuidedScheduler(G, lws, devs)
+    pkt = sched.next_packet(1)
+    expect = math.ceil(G * 6.0 / (2.0 * 2 * 8.0))
+    expect = lws * math.ceil(expect / lws)
+    assert pkt.size == expect
+
+
+def test_hguided_sizes_decrease():
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 1.0)]
+    sched = HGuidedScheduler(100000, 4, devs)
+    sizes = []
+    while True:
+        p = sched.next_packet(0)
+        if p is None:
+            break
+        sizes.append(p.size)
+    assert sizes == sorted(sizes, reverse=True) or \
+        all(b <= a for a, b in zip(sizes, sizes[1:]))
+    assert sizes[-1] >= 4  # min packet >= lws
+
+
+def test_hguided_min_packet_respected():
+    devs = [DeviceProfile("a", 1.0, min_mult=5, k=4.0)]
+    sched = HGuidedScheduler(1000, 8, devs)
+    while True:
+        p = sched.next_packet(0)
+        if p is None:
+            break
+        if p.offset + p.size != 1000:
+            assert p.size >= 5 * 8
+
+
+def test_static_order_matters():
+    devs = [DeviceProfile("cpu", 1.0), DeviceProfile("gpu", 9.0)]
+    s1 = StaticScheduler(1000, 10, devs)
+    s2 = StaticScheduler(1000, 10, devs, order=[1, 0])
+    p1 = s1.next_packet(0)   # cpu first chunk at offset 0
+    p2 = s2.next_packet(0)   # reversed: cpu chunk after gpu's
+    assert p1.offset == 0
+    assert p2.offset > 0
+
+
+def test_static_proportional():
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 3.0)]
+    sched = StaticScheduler(4000, 1, devs)
+    pa = sched.next_packet(0)
+    pb = sched.next_packet(1)
+    assert abs(pa.size - 1000) <= 2
+    assert abs(pb.size - 3000) <= 2
+
+
+def test_dynamic_packet_count():
+    devs = [DeviceProfile("a", 1.0)]
+    sched = DynamicScheduler(1024, 1, devs, n_packets=64)
+    out = drain(sched, 1)
+    assert len(out[0]) == 64
+
+
+def test_requeue_fault_tolerance():
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 1.0)]
+    sched = DynamicScheduler(100, 1, devs, n_packets=10)
+    p = sched.next_packet(0)
+    sched.requeue(p)
+    out = drain(sched, 2)
+    allp = [q for ps in out.values() for q in ps]
+    assert coverage_ok(allp, 100)
+
+
+def test_tuned_profiles_paper_laws():
+    devs = [DeviceProfile("cpu", 1.0), DeviceProfile("igpu", 3.0),
+            DeviceProfile("gpu", 7.0)]
+    out = tuned_profiles(devs)
+    # (a)/(b): more power => larger m, smaller k; exact triple for n=3
+    assert [d.min_mult for d in out] == [1, 15, 30]
+    assert [d.k for d in out] == [3.5, 1.5, 1.0]
+
+
+def test_hguided_opt_fleet_scale_adaptation():
+    devs = [DeviceProfile(f"g{i}", 1.0) for i in range(64)]
+    sched = HGuidedOptScheduler(64 * 64, 1, devs)
+    assert all(d.k >= 2.0 for d in sched.devices)
+    assert all(d.min_mult == 1 for d in sched.devices)
+
+
+def test_thread_safety():
+    devs = [DeviceProfile(f"d{i}", 1.0 + i) for i in range(4)]
+    sched = HGuidedScheduler(20000, 4, devs)
+    got = []
+    lock = threading.Lock()
+
+    def worker(i):
+        while True:
+            p = sched.next_packet(i)
+            if p is None:
+                return
+            with lock:
+                got.append(p)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert coverage_ok(got, 20000)

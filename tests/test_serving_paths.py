@@ -1,0 +1,96 @@
+"""Serving-path structural variants: unrolled vs scanned decode, stacked vs
+unstacked weights — all must produce identical logits (the §Perf cell C
+optimizations may not change semantics)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.launch import specs as SP
+from repro.models import transformer as T
+
+
+def _setup(arch, **cfg_over):
+    cfg = get_smoke(arch)
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    return cfg, params, toks
+
+
+def _decode_logits(cfg, params, toks):
+    cache, _ = T.init_cache(cfg, 2, 24)
+    lg, cache = T.prefill(cfg, params, toks, cache)
+    out = [np.asarray(lg)]
+    tok = jnp.argmax(lg[:, -1], -1)[:, None]
+    for i in range(4):
+        lg, cache = T.decode_step(cfg, params, tok, cache, jnp.int32(16 + i))
+        out.append(np.asarray(lg))
+        tok = jnp.argmax(lg[:, -1], -1)[:, None]
+    return np.concatenate(out, axis=1)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "jamba-v0.1-52b",
+                                  "deepseek-v2-lite-16b"])
+def test_unrolled_matches_scanned_decode(arch):
+    cfg_u, params, toks = _setup(arch, decode_unroll=True)
+    cfg_s = dataclasses.replace(cfg_u, decode_unroll=False)
+    lu = _decode_logits(cfg_u, params, toks)
+    ls = _decode_logits(cfg_s, params, toks)
+    np.testing.assert_allclose(lu, ls, rtol=2e-4, atol=2e-4)
+
+
+def test_unstacked_weights_match_stacked():
+    cfg, params, toks = _setup("llama3.2-1b", decode_unroll=True)
+    # build the unstacked weight view and run decode with it
+    n = jax.tree.leaves(params["blocks"])[0].shape[0]
+    params_u = dict(params)
+    params_u["blocks"] = [jax.tree.map(lambda t: t[i], params["blocks"])
+                          for i in range(n)]
+    ls = _decode_logits(cfg, params, toks)
+    lu = _decode_logits(cfg, params_u, toks)
+    np.testing.assert_allclose(lu, ls, rtol=1e-5, atol=1e-5)
+
+
+def test_abstract_params_unstacked_structure():
+    cfg = get_smoke("qwen3-32b")
+    p, a = SP.abstract_params_unstacked(cfg)
+    assert isinstance(p["blocks"], list) and isinstance(a["blocks"], list)
+    n = len(p["blocks"])
+    assert n == cfg.n_layers // cfg.block_period
+    stacked, _ = SP.abstract_params(cfg)
+    lead = jax.tree.leaves(stacked["blocks"])[0]
+    leaf = jax.tree.leaves(p["blocks"][0])[0]
+    assert lead.shape[1:] == leaf.shape
+
+
+def test_sqrt_remat_matches_flat_forward():
+    """Grouped (sqrt-L) remat must not change the forward values."""
+    cfg, params, toks = _setup("llama3.2-1b")
+    cfg_flat = dataclasses.replace(cfg, remat_groups=1)
+    cfg_grp = dataclasses.replace(cfg, remat_groups=2)
+    lf, _ = T.forward(cfg_flat, params, toks)
+    lg, _ = T.forward(cfg_grp, params, toks)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lg),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sqrt_remat_matches_flat_gradients():
+    from repro.training.step import make_loss_fn
+    cfg, params, toks = _setup("llama3.2-1b")
+    batch = {"tokens": toks}
+    grads = {}
+    for name, g in (("flat", 1), ("grouped", 2)):
+        c = dataclasses.replace(cfg, remat_groups=g)
+        loss_fn = make_loss_fn(c)
+        (_, _), gr = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        grads[name] = gr
+    for a, b in zip(jax.tree.leaves(grads["flat"]),
+                    jax.tree.leaves(grads["grouped"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)

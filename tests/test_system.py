@@ -1,0 +1,80 @@
+"""End-to-end behaviour of the paper's system: co-execution runs the same
+problem faster/equal and EXACT vs single device, the optimized HGuided is
+the best scheduler under the calibrated testbed, and the two runtime
+optimizations improve binary/ROI modes — the paper's headline claims as
+executable assertions."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_suite import BENCHES, SCHED_CONFIGS, sim_devices
+from repro.core import metrics as M
+from repro.core import programs as P
+from repro.core.device import DeviceGroup
+from repro.core.runtime import Engine
+from repro.core.simulate import SimConfig, simulate, single_device_time
+
+
+def test_claim_hguided_opt_is_best_scheduler():
+    """Paper: 'the new load balancing algorithm is always the most
+    efficient scheduling configuration'."""
+    geo = {}
+    for label, sched, kw in SCHED_CONFIGS:
+        effs = []
+        for bname, spec in BENCHES.items():
+            devs = sim_devices(spec)
+            base = SimConfig(opt_init=True, opt_buffers=True)
+            singles = [single_device_time(spec.total_work, spec.lws, d, base)
+                       for d in devs]
+            ts = []
+            for seed in range(5):
+                cfg = SimConfig(scheduler=sched, scheduler_kwargs=kw,
+                                opt_init=True, opt_buffers=True, seed=seed)
+                ts.append(simulate(spec.total_work, spec.lws, devs,
+                                   cfg).total_time)
+            effs.append(M.efficiency(min(singles), sum(ts) / len(ts),
+                                     singles))
+        geo[label] = M.geomean(effs)
+    assert max(geo, key=geo.get) == "HGuided opt"
+    assert geo["HGuided opt"] > geo["HGuided"]          # +~3% in the paper
+    assert geo["HGuided opt"] > 0.8                     # paper: 0.84
+
+
+def test_claim_coexecution_beats_fastest_device():
+    """Paper: HGuided is 'always better than using the fastest device'."""
+    for bname, spec in BENCHES.items():
+        devs = sim_devices(spec)
+        base = SimConfig(opt_init=True, opt_buffers=True)
+        gpu_time = single_device_time(spec.total_work, spec.lws, devs[-1],
+                                      base)
+        cfg = SimConfig(scheduler="hguided_opt", opt_init=True,
+                        opt_buffers=True, seed=0)
+        co = simulate(spec.total_work, spec.lws, devs, cfg).total_time
+        assert co < gpu_time, bname
+
+
+def test_claim_optimizations_improve_both_modes():
+    spec = BENCHES["gaussian"]
+    devs = sim_devices(spec)
+    t = {}
+    for tag, oi, ob in (("unopt", False, False), ("opt", True, True)):
+        cfg = SimConfig(scheduler="hguided_opt", opt_init=oi,
+                        opt_buffers=ob, seed=0)
+        r = simulate(spec.total_work, spec.lws, devs, cfg)
+        t[tag] = (r.total_time, r.binary_time)
+    assert t["opt"][0] < t["unopt"][0]     # ROI improves (buffers)
+    assert t["opt"][1] < t["unopt"][1]     # binary improves (init)
+
+
+def test_real_engine_end_to_end_exact():
+    """Full co-execution on real devices, every program, vs oracle."""
+    cases = {"gaussian": dict(h=256, w=128), "binomial": dict(n_options=2048),
+             "nbody": dict(n_bodies=1024)}
+    for name, kw in cases.items():
+        ref = P.reference_output(name, **kw)
+        prog = P.PROGRAMS[name](**kw)
+        eng = Engine(prog, [DeviceGroup("a", throttle=2.0),
+                            DeviceGroup("b", throttle=1.0)],
+                     scheduler="hguided_opt")
+        res = eng.run()
+        np.testing.assert_allclose(res.output, ref, rtol=1e-5, atol=1e-5)
+        assert M.balance(res) > 0     # both devices participated
