@@ -21,6 +21,9 @@ ranges, ``lws``-aligned except for the final remainder.
   (more powerful => larger m, smaller k; best combo m={1,15,30},
   k={3.5,1.5,1} for a weak/mid/strong triple), plus optional online EWMA
   power re-estimation (beyond-paper, used by the hetero-DP trainer).
+* ``HGuidedDeadline`` — beyond-paper serving variant of HGuidedOpt: packet
+  sizes are additionally capped by the tightest remaining deadline slack
+  (``update_slack``), shrinking toward ``lws`` as deadlines close in.
 
 All schedulers are thread-safe (the paper's "atomic queue") and support
 ``requeue`` of in-flight packets for fault tolerance.
@@ -172,7 +175,11 @@ class HGuidedScheduler(SchedulerBase):
         n = len(self.devices)
         raw = math.ceil(G_r * d.power / (d.k * n * total_p))
         size = max(d.min_mult * self.lws, self._align(raw))
-        return self._take(size, device)
+        return self._take(self._cap_size(device, size), device)
+
+    def _cap_size(self, device: int, size: int) -> int:
+        """Hook for subclasses to bound a carved packet (deadline caps)."""
+        return size
 
 
 def tuned_profiles(devices: Sequence[DeviceProfile]) -> List[DeviceProfile]:
@@ -238,6 +245,48 @@ class HGuidedOptScheduler(HGuidedScheduler):
         self.update_power(device, cur)
 
 
+class HGuidedDeadlineScheduler(HGuidedOptScheduler):
+    """Deadline-aware HGuidedOpt for time-constrained serving.
+
+    On top of the tuned (m, k) pairs and online EWMA powers, every carved
+    packet is capped so its *predicted* execution time on the target device
+    fits inside a fraction of the tightest remaining slack:
+
+        cap_i = slack * slack_fraction * P_i      (work-groups)
+
+    The caller (CoexecServer / simulate_serving) refreshes the slack before
+    each dispatch round via ``update_slack(min_deadline - now)``.  As
+    deadlines close in, packets shrink toward ``lws`` — more scheduling
+    points, finer EDF admission, less work stranded behind a long packet
+    when a request is about to miss.  With no deadline pressure
+    (``slack=None``) it degenerates to HGuidedOpt exactly.
+    """
+
+    def __init__(self, total_work, lws, devices, ewma: float = 0.5,
+                 slack_fraction: float = 0.5):
+        super().__init__(total_work, lws, devices, ewma=ewma)
+        assert 0.0 < slack_fraction <= 1.0
+        self.slack_fraction = slack_fraction
+        self._slack: Optional[float] = None
+
+    def update_slack(self, slack_s: Optional[float]) -> None:
+        """Set the tightest remaining slack (seconds); None lifts the cap."""
+        # plain attribute store (atomic in CPython); _carve runs under the
+        # scheduler lock and only reads it once
+        self._slack = None if slack_s is None else max(0.0, float(slack_s))
+
+    def _cap_size(self, device: int, size: int) -> int:
+        slack = self._slack
+        if slack is None:
+            return size
+        d = self.devices[device]
+        cap_wg = d.power * slack * self.slack_fraction
+        # floor-align to lws but never below one work-group unit: a starved
+        # device must still drain the queue, one minimal packet at a time
+        cap = max(self.lws, self.lws * int(cap_wg // self.lws))
+        return min(size, cap)
+
+
 SCHEDULERS = {
     "static": StaticScheduler,
     "static_rev": lambda G, lws, devs, **kw: StaticScheduler(
@@ -245,9 +294,26 @@ SCHEDULERS = {
     "dynamic": DynamicScheduler,
     "hguided": HGuidedScheduler,
     "hguided_opt": HGuidedOptScheduler,
+    "hguided_deadline": HGuidedDeadlineScheduler,
 }
 
 
 def make_scheduler(name: str, total_work: int, lws: int,
                    devices: Sequence[DeviceProfile], **kw) -> SchedulerBase:
     return SCHEDULERS[name](total_work, lws, devices, **kw)
+
+
+def rotate_static_order(name: str, n_devices: int,
+                        round_index: int) -> Optional[List[int]]:
+    """Weighted round-robin delivery order for per-round Static dispatch.
+
+    Serving engines instantiate one scheduler per dispatch round; without
+    rotating Static's fixed delivery order across rounds, every small
+    round lands whole on the first-ordered device while the rest of the
+    fleet idles.  Returns None for non-static schedulers (no override).
+    Shared by CoexecServer and simulate_serving so the discrete-event twin
+    cannot drift from the threaded server.
+    """
+    if name != "static":
+        return None
+    return [(j + round_index) % n_devices for j in range(n_devices)]

@@ -35,7 +35,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.metrics import RunResult
-from repro.core.scheduler import DeviceProfile, make_scheduler
+from repro.core.scheduler import (DeviceProfile, make_scheduler,
+                                  rotate_static_order)
 
 # fraction of the input set that is full-size read-only buffers, re-copied
 # per packet by the unoptimized buffer path
@@ -194,3 +195,196 @@ def single_device_time(total_work: int, lws: int, device: SimDevice,
     cfg = cfg or SimConfig()
     return device.packet_time(0, total_work, total_work, 0.0,
                               cfg.opt_buffers)
+
+
+# ---------------------------------------------------------------------------
+# Open-loop serving: the CoexecServer's discrete-event twin.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServeSimResult:
+    requests: List                         # the input requests, accounting filled
+    duration: float                        # last completion / shed time
+    device_busy: List[float]
+    rounds: int
+    all_dead: bool = False                 # every device failed mid-stream
+
+
+def simulate_serving(requests: Sequence, lws: int,
+                     devices: Sequence[SimDevice], cfg: SimConfig, *,
+                     policy: str = "shed",
+                     batch_window_s: float = 0.0,
+                     round_quantum_s: float = math.inf) -> ServeSimResult:
+    """Open-loop serving against calibrated device models.
+
+    ``requests`` are ``repro.serve.workload.Request``-shaped objects (duck
+    typed: rid/arrival/deadline/size read; finish/shed/replica written), kept
+    out of this module so core never imports the serve layer.  Semantics
+    mirror CoexecServer: successive *dispatch rounds* of EDF-ordered
+    admission, one scheduler instance per round (same SCHEDULERS registry,
+    same observe/requeue API as ``simulate``), predictions and shedding from
+    the cross-round EWMA powers.  Devices keep simulate()'s failure /
+    straggler / jitter / transfer model, so the same serving policies can be
+    stress-tested at 1000-replica scale in milliseconds.
+    """
+    import random
+    assert policy in ("shed", "none")
+    rng = random.Random(cfg.seed)
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    n = len(devices)
+    # cross-round power estimates: start from the (possibly biased) offline
+    # profile; rounds with an observing scheduler refine them online
+    powers = [d.throughput * d.profile_bias for d in devices]
+    free = [0.0] * n
+    busy = [0.0] * n
+    dead = [False] * n
+    now = 0.0
+    i_next = 0
+    pending: List = []
+    rounds = 0
+    all_dead = False
+
+    def alive() -> List[int]:
+        return [i for i in range(n) if not dead[i]]
+
+    while pending or i_next < len(reqs):
+        if not alive():
+            all_dead = True
+            for r in pending + reqs[i_next:]:
+                r.shed = True
+            break
+        # release arrivals; when idle, jump the clock to the next arrival
+        # plus the batching window (standard serving micro-batching: a few
+        # ms of waiting gives the round enough work for a proportional
+        # split to be meaningful and amortizes per-packet overheads)
+        if not pending and i_next < len(reqs):
+            now = max(now, reqs[i_next].arrival + batch_window_s)
+        while i_next < len(reqs) and reqs[i_next].arrival <= now:
+            pending.append(reqs[i_next])
+            i_next += 1
+        # admission: EDF order, shed predicted misses (CoexecServer._admit).
+        # Predictions start from the earliest time any replica frees up, so
+        # an in-flight backlog pushes predicted finishes (and sheds) out.
+        pending.sort(key=lambda r: (r.deadline, r.rid))
+        total_p = sum(powers[i] for i in alive())
+        # residual in-flight work (wg) already queued on device clocks:
+        # without it the predictor only sees THIS round's queue and admits
+        # doomed requests under backlog
+        resid = sum(max(free[i] - now, 0.0) * powers[i] for i in alive())
+        # round quantum (iteration-level scheduling): admit only ~one
+        # quantum of EDF-first work per round, so under backlog the server
+        # re-sorts, re-predicts and re-sheds frequently instead of
+        # committing the whole queue to one long round
+        cap_wg = total_p * round_quantum_s
+        admitted: List = []
+        leftover: List = []
+        cum = 0.0
+        for r in pending:
+            if admitted and cum + r.size > cap_wg:
+                leftover.append(r)
+                continue
+            cum += r.size
+            if (policy == "shed"
+                    and now + (resid + cum) / total_p > r.deadline):
+                r.shed = True
+                cum -= r.size
+            else:
+                admitted.append(r)
+        pending = leftover
+        if not admitted:
+            continue
+        rounds += 1
+        # one scheduler instance over the admitted round
+        amap = alive()
+        G = sum(r.size for r in admitted)
+        wg_owner: List[int] = []           # work-group offset -> request idx
+        for j, r in enumerate(admitted):
+            wg_owner.extend([j] * r.size)
+        profiles = [DeviceProfile(devices[g].name, powers[g]) for g in amap]
+        skw = dict(cfg.scheduler_kwargs)
+        order = rotate_static_order(cfg.scheduler, len(amap), rounds)
+        if order is not None:
+            skw.setdefault("order", order)
+        sched = make_scheduler(cfg.scheduler, G, lws, profiles, **skw)
+        if hasattr(sched, "update_slack"):
+            sched.update_slack(min(r.deadline for r in admitted) - now)
+        done_wg = [0] * len(admitted)
+        fin_max = [0.0] * len(admitted)
+        heap: List[Tuple[float, int]] = []
+        for ai, g in enumerate(amap):
+            heapq.heappush(heap, (max(now, free[g]), ai))
+        # host-thread serialization is round-local: rounds overlap in wall
+        # time but are processed sequentially, so carrying the chain across
+        # rounds would let a straggler's late launch block earlier ones
+        host_free = now
+        while heap:
+            t, ai = heapq.heappop(heap)
+            g = amap[ai]
+            d = devices[g]
+            if dead[g]:
+                continue
+            if t < free[g]:
+                # stale entry (failure wakeups push duplicates for devices
+                # that already have a live event): a device can't start a
+                # packet before its clock frees up
+                heapq.heappush(heap, (free[g], ai))
+                continue
+            pkt = sched.next_packet(ai)
+            if pkt is None:
+                continue
+            start = max(t, host_free)
+            host_free = start + cfg.host_cost_per_packet
+            dt = d.packet_time(pkt.offset, pkt.size, G, start,
+                               cfg.opt_buffers) + (start - t)
+            if d.jitter > 0:
+                dt *= math.exp(rng.gauss(0.0, d.jitter))
+            end = t + dt
+            # unlike the fixed-batch simulate(), a serving device can be
+            # idle when its failure time passes — it is dead for any packet
+            # starting at or after fail_at, not just one spanning it
+            if d.fail_at is not None and (t >= d.fail_at
+                                          or end > d.fail_at >= t):
+                dead[g] = True
+                free[g] = min(t, d.fail_at)
+                sched.requeue(pkt)
+                for aj, gj in enumerate(amap):
+                    if not dead[gj]:
+                        heapq.heappush(heap, (max(d.fail_at, free[gj]), aj))
+                continue
+            busy[g] += dt
+            free[g] = end
+            if hasattr(sched, "observe"):
+                sched.observe(ai, pkt.size / max(dt, 1e-12))
+            for o in range(pkt.offset, pkt.offset + pkt.size):
+                j = wg_owner[o]
+                done_wg[j] += 1
+                fin_max[j] = max(fin_max[j], end)
+                if done_wg[j] == admitted[j].size:
+                    admitted[j].finish = fin_max[j]
+                    admitted[j].replica = d.name
+            heapq.heappush(heap, (end, ai))
+        if sched.remaining() > 0:
+            # every device died mid-round (amap was the full alive set):
+            # unfinished requests are lost, and the fleet is gone even if
+            # the loop exits before re-checking alive()
+            all_dead = True
+            for j, r in enumerate(admitted):
+                if done_wg[j] < r.size:
+                    r.shed = True
+        # carry the schedulers' online estimates into the next round's
+        # profile (schedulers without observe leave them untouched — Static
+        # keeps trusting its offline profile, and keeps paying for it)
+        for ai, g in enumerate(amap):
+            if not dead[g] and hasattr(sched, "observe"):
+                powers[g] = sched.devices[ai].power
+        # next round: earliest point a surviving device frees up, but never
+        # before the next arrival if the fleet drained the backlog
+        if i_next < len(reqs) or pending:
+            nxt = min(free[g] for g in alive()) if alive() else now
+            now = max(now, nxt)
+
+    fins = [r.finish for r in reqs if r.finish is not None]
+    duration = max(fins) if fins else now
+    return ServeSimResult(requests=reqs, duration=duration,
+                          device_busy=busy, rounds=rounds,
+                          all_dead=all_dead)

@@ -1,0 +1,21 @@
+"""Deadline-aware co-execution serving subsystem.
+
+Open-loop request workloads (workload.py) dispatched across heterogeneous
+model replicas by the paper's scheduler stack (server.py), with a shared
+accounting path (stats.py).  The discrete-event twin lives in
+core/simulate.py::simulate_serving and reuses the same Request objects,
+schedulers and metrics at 1000-replica scale.
+"""
+from repro.serve.replica import Replica
+from repro.serve.server import CoexecServer, ServeOutcome, ServerConfig
+from repro.serve.stats import ServeStats, percentile, summarize
+from repro.serve.workload import (ARRIVALS, Request, RequestQueue,
+                                  bursty_arrivals, make_requests,
+                                  poisson_arrivals, trace_arrivals)
+
+__all__ = [
+    "ARRIVALS", "CoexecServer", "Replica", "Request", "RequestQueue",
+    "ServeOutcome", "ServeStats", "ServerConfig", "bursty_arrivals",
+    "make_requests", "percentile", "poisson_arrivals", "summarize",
+    "trace_arrivals",
+]

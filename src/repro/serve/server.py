@@ -1,0 +1,252 @@
+"""CoexecServer: deadline-aware open-loop serving on the co-execution stack.
+
+Generalizes the old fixed-batch worker loop into a continuous serving
+engine.  The request stream is the co-execution work set (1 work-group =
+one request); the paper's schedulers are the dispatch engine across
+heterogeneous replicas.  Dataflow per *dispatch round*:
+
+    RequestQueue --poll(now)--> admission (EDF order, shed/degrade)
+        --> scheduler over the admitted round (HGuided* packets)
+        --> replica worker threads pull packets, decode, commit
+        --> per-request latency accounting + EWMA power feedback
+
+* **Admission (EDF-within-round)**: pending requests are sorted by
+  deadline; each request's completion is predicted from the replicas'
+  online EWMA computing powers (the same estimates HGuidedOpt adapts
+  with).  A request predicted to miss is *shed* (dropped now, so its
+  work cannot drag every later request past its deadline too) or
+  *degraded* (granted proportionally fewer decode tokens) per policy.
+* **Dispatch**: the admitted round becomes one scheduler instance —
+  any registered scheduler works; ``hguided_deadline`` additionally
+  receives the round's tightest slack so packets shrink as deadlines
+  close in.
+* **Feedback**: measured requests/s per replica updates both the live
+  scheduler (within-round adaptation) and the server's EWMA powers
+  (carried across rounds — the admission predictor and the next round's
+  initial profile).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import (DeviceProfile, make_scheduler,
+                                  rotate_static_order)
+from repro.serve.replica import Replica
+from repro.serve.stats import ServeStats, summarize
+from repro.serve.workload import Request, RequestQueue
+
+
+@dataclass
+class ServerConfig:
+    scheduler: str = "hguided_deadline"
+    scheduler_kwargs: Dict = field(default_factory=dict)
+    lws: int = 1                  # requests per packet alignment unit
+    gen: int = 16                 # decode tokens per request
+    policy: str = "shed"          # "shed" | "degrade" | "none"
+    min_gen: int = 1              # floor for degraded requests
+    ewma: float = 0.5             # cross-round power smoothing
+    poll_interval_s: float = 2e-3
+    batch_window_s: float = 0.0   # micro-batching: wait for round to fill
+    round_quantum_s: float = float("inf")  # max EDF-first work per round
+    warmup: bool = True           # pre-compile before starting the clock
+
+
+@dataclass
+class ServeOutcome:
+    stats: ServeStats
+    requests: List[Request]
+    results: Dict[int, np.ndarray]        # rid -> generated tokens
+
+
+class CoexecServer:
+    """Continuous admission + co-execution dispatch over model replicas."""
+
+    def __init__(self, replicas: Sequence[Replica], cfg: ServerConfig, *,
+                 initial_power: Optional[Dict[str, float]] = None):
+        assert cfg.policy in ("shed", "degrade", "none")
+        self.replicas = list(replicas)
+        self.cfg = cfg
+        # requests/s per replica.  Admission needs an absolute scale: until
+        # one round has been observed, predictions are uncalibrated and
+        # admission lets everything through (unless the caller provides
+        # measured powers up front).
+        self._power: Dict[str, float] = dict(initial_power or {})
+        self._calibrated = initial_power is not None
+        self._round = 0
+        self._lock = threading.Lock()
+
+    # -- admission -----------------------------------------------------------
+    def _admit(self, pending: List[Request], now: float,
+               completed: List[Request]
+               ) -> Tuple[List[Request], List[Request]]:
+        """EDF-order ``pending``; shed/degrade predicted misses in place.
+
+        Returns (admitted round, leftover beyond the round quantum) — the
+        leftover stays queued so EDF re-sorting / re-prediction happens
+        every quantum instead of once per backlog (iteration-level
+        scheduling).  The threaded server treats every request as one unit
+        of work (``Request.size`` is a simulator concept), matching the
+        requests/s scale of its EWMA powers.
+        """
+        pending.sort(key=lambda r: (r.deadline, r.rid))
+        for r in pending:
+            r.gen_alloc = self.cfg.gen
+        calibrated = self._calibrated and self.cfg.policy != "none"
+        total_p = sum(self._power.values())
+        cap_reqs = (total_p * self.cfg.round_quantum_s
+                    if total_p > 0 else float("inf"))
+        admitted: List[Request] = []
+        leftover: List[Request] = []
+        cum = 0.0
+        for r in pending:
+            if admitted and cum + 1 > cap_reqs:
+                leftover.append(r)
+                continue
+            cum += 1
+            if not calibrated or total_p <= 0:
+                admitted.append(r)
+                continue
+            pred_finish = now + cum / total_p
+            if pred_finish <= r.deadline:
+                admitted.append(r)
+                continue
+            if self.cfg.policy == "degrade":
+                # degrade never drops: scale the generation budget to the
+                # remaining slack, down to min_gen for already-late work
+                slack = r.deadline - now
+                frac = (slack / (pred_finish - now)
+                        if slack > 0 else 0.0)
+                r.gen_alloc = max(self.cfg.min_gen,
+                                  int(self.cfg.gen * frac))
+                r.degraded = r.gen_alloc < self.cfg.gen
+                admitted.append(r)
+            else:
+                r.shed = True
+                r.finish = None
+                completed.append(r)
+                cum -= 1                # shed work frees the queue behind it
+        return admitted, leftover
+
+    # -- dispatch ------------------------------------------------------------
+    def _run_round(self, admitted: List[Request], now: float, t0: float,
+                   results: Dict[int, np.ndarray],
+                   dispatch: Dict[str, int]) -> None:
+        cfg = self.cfg
+        profiles = [DeviceProfile(r.name, self._power.get(r.name,
+                                                          1.0 / r.group.throttle))
+                    for r in self.replicas]
+        skw = dict(cfg.scheduler_kwargs)
+        order = rotate_static_order(cfg.scheduler, len(self.replicas),
+                                    self._round)
+        if order is not None:
+            skw.setdefault("order", order)
+        self._round += 1
+        sched = make_scheduler(cfg.scheduler, len(admitted), cfg.lws,
+                               profiles, **skw)
+        if hasattr(sched, "update_slack"):
+            sched.update_slack(min(r.deadline for r in admitted) - now)
+
+        def worker(i: int):
+            rep = self.replicas[i]
+            while True:
+                pkt = sched.next_packet(i)
+                if pkt is None:
+                    return
+                # execute in lws-sized sub-batches: fixed batch shapes keep
+                # XLA from recompiling per packet size, and give finer
+                # per-request completion times
+                for c0 in range(0, pkt.size, cfg.lws):
+                    sub = admitted[pkt.offset + c0:
+                                   pkt.offset + min(c0 + cfg.lws, pkt.size)]
+                    gen_eff = min(r.gen_alloc for r in sub)
+                    # pad to exactly lws rows and pin the cache length:
+                    # one compiled (prefill, decode) pair serves every
+                    # packet, whatever the round or degrade policy carved
+                    rows = [r.prompt for r in sub]
+                    rows += [rows[-1]] * (cfg.lws - len(rows))
+                    prompts = np.stack(rows)
+                    cache_len = prompts.shape[1] + cfg.gen
+                    t_pkt = time.perf_counter()
+                    toks = rep.serve(prompts, gen_eff, cache_len)
+                    dt = time.perf_counter() - t_pkt
+                    if rep.group.throttle > 1:    # emulated heterogeneity
+                        time.sleep(dt * (rep.group.throttle - 1))
+                        dt *= rep.group.throttle
+                    fin = time.perf_counter() - t0
+                    rps = len(sub) / max(dt, 1e-9)
+                    if hasattr(sched, "observe"):
+                        sched.observe(i, rps)
+                    with self._lock:
+                        for j, r in enumerate(sub):
+                            r.finish = fin
+                            r.replica = rep.name
+                            r.degraded = r.degraded or gen_eff < cfg.gen
+                            results[r.rid] = toks[j]
+                        dispatch[rep.name] = (dispatch.get(rep.name, 0)
+                                              + len(sub))
+                        prev = self._power.get(rep.name)
+                        self._power[rep.name] = rps if prev is None else (
+                            cfg.ewma * rps + (1 - cfg.ewma) * prev)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(len(self.replicas))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        self._calibrated = True
+
+    # -- main entry ----------------------------------------------------------
+    def _warmup(self, queue: RequestQueue) -> None:
+        """Compile prefill + decode for the serving batch shape on every
+        replica BEFORE the clock starts — cold-start compile time must not
+        poison the EWMA powers the admission predictor relies on."""
+        first = queue.preview()
+        if first is None or first.prompt is None:
+            return
+        prompts = np.stack([first.prompt] * self.cfg.lws)
+        cache_len = prompts.shape[1] + self.cfg.gen
+        for rep in self.replicas:
+            rep.serve(prompts, 1, cache_len)
+
+    def run(self, queue: RequestQueue) -> ServeOutcome:
+        """Serve the whole queue open-loop; returns stats + outputs."""
+        if self.cfg.warmup:
+            self._warmup(queue)
+        t0 = time.perf_counter()
+        completed: List[Request] = []
+        results: Dict[int, np.ndarray] = {}
+        dispatch: Dict[str, int] = {r.name: 0 for r in self.replicas}
+        pending: List[Request] = []
+        while True:
+            now = time.perf_counter() - t0
+            pending.extend(queue.poll(now))
+            if not pending:
+                nxt = queue.next_arrival()
+                if nxt is None:
+                    break
+                # the queue is fixed at run() time: nothing can arrive
+                # before nxt, so sleep straight through to it
+                time.sleep(max(nxt - now, 0.0) + 1e-4)
+                continue
+            # micro-batching: hold a young round open while more requests
+            # are still inbound, so the scheduler has work to split
+            oldest = min(r.arrival for r in pending)
+            if (self.cfg.batch_window_s > 0
+                    and queue.next_arrival() is not None
+                    and now - oldest < self.cfg.batch_window_s):
+                time.sleep(self.cfg.poll_interval_s)
+                continue
+            admitted, pending = self._admit(pending, now, completed)
+            if not admitted:
+                continue
+            self._run_round(admitted, now, t0, results, dispatch)
+            completed.extend(admitted)
+        stats = summarize(completed, duration=time.perf_counter() - t0,
+                          dispatch=dispatch)
+        return ServeOutcome(stats=stats, requests=completed, results=results)

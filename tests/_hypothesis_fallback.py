@@ -1,0 +1,107 @@
+"""Deterministic fallback for the `hypothesis` property-testing API.
+
+The test suite uses a small slice of hypothesis (`given`, `settings`,
+`strategies.integers/floats/lists/sampled_from`).  When the real library
+is installed (see requirements-dev.txt) it is used untouched; when it is
+absent — hermetic CI images, the pinned repro container — importing this
+module registers a seeded random-sampling stand-in under
+``sys.modules["hypothesis"]`` so property tests still *run* (as seeded
+randomized tests) instead of failing at collection.
+
+Limitations vs the real thing (acceptable for a fallback): no shrinking,
+no example database, no coverage-guided generation.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_SEED = 0xC0E0EC            # fixed seed: runs are reproducible
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2**15) if min_value is None else min_value
+    hi = 2**15 if max_value is None else max_value
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def floats(min_value=None, max_value=None, **_kw):
+    lo = -1e6 if min_value is None else min_value
+    hi = 1e6 if max_value is None else max_value
+    return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+def lists(elements, min_size=0, max_size=None, **_kw):
+    cap = min_size + 10 if max_size is None else max_size
+
+    def draw(rng):
+        n = rng.randint(min_size, cap)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        def runner():
+            # resolved at call time so @settings works written above OR
+            # below @given (both orders are legal in real hypothesis)
+            cfg = (getattr(runner, "_fallback_settings", None)
+                   or getattr(fn, "_fallback_settings", {}))
+            n_examples = cfg.get("max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n_examples):
+                args = [s.draw(rng) for s in arg_strategies]
+                kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs)
+
+        # NOTE: deliberately no functools.wraps — pytest must see a
+        # zero-argument signature, not the strategy parameters (which it
+        # would otherwise try to resolve as fixtures).
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco
+
+
+def install() -> None:
+    """Register the fallback as ``hypothesis`` / ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from"):
+        setattr(st, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    hyp.assume = lambda cond: None
+    hyp.__version__ = "0.0-fallback"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,306 @@
+"""Deadline-aware serving subsystem: scheduler variant, workloads,
+open-loop simulator, and the threaded CoexecServer."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (SCHEDULERS, DeviceProfile,
+                                  HGuidedDeadlineScheduler,
+                                  HGuidedOptScheduler, make_scheduler)
+from repro.core.simulate import SimConfig, SimDevice, simulate_serving
+from repro.serve import (Request, RequestQueue, bursty_arrivals,
+                         make_requests, poisson_arrivals, summarize,
+                         trace_arrivals)
+from repro.serve.stats import percentile
+
+
+# ---------------------------------------------------------- HGuidedDeadline
+
+def test_hguided_deadline_registered():
+    assert "hguided_deadline" in SCHEDULERS
+    sched = make_scheduler("hguided_deadline", 100, 4,
+                           [DeviceProfile("a", 1.0)])
+    assert isinstance(sched, HGuidedDeadlineScheduler)
+    assert isinstance(sched, HGuidedOptScheduler)   # inherits EWMA observe
+
+
+def test_hguided_deadline_shrinks_with_slack():
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 3.0)]
+    sched = make_scheduler("hguided_deadline", 10000, 8, devs)
+    wide = sched.next_packet(1)
+    sched.update_slack(1e-3)        # ~3 wg of budget at power 3
+    tight = sched.next_packet(1)
+    assert tight.size == 8          # shrunk to the lws floor
+    assert tight.size < wide.size
+    sched.update_slack(None)        # lifting the cap restores HGuidedOpt
+    lifted = sched.next_packet(1)
+    assert lifted.size > tight.size
+
+
+def test_hguided_deadline_no_slack_matches_hguided_opt():
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 3.0),
+            DeviceProfile("c", 7.0)]
+    a = make_scheduler("hguided_deadline", 5000, 8, devs)
+    b = make_scheduler("hguided_opt", 5000, 8,
+                       [DeviceProfile(d.name, d.power) for d in devs])
+    for dev in (2, 1, 0, 2, 1):
+        pa, pb = a.next_packet(dev), b.next_packet(dev)
+        assert (pa.offset, pa.size) == (pb.offset, pb.size)
+
+
+def test_hguided_deadline_coverage():
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 2.0)]
+    sched = make_scheduler("hguided_deadline", 1000, 8, devs)
+    sched.update_slack(0.5)
+    got = []
+    active = {0, 1}
+    while active:
+        for i in list(active):
+            p = sched.next_packet(i)
+            if p is None:
+                active.discard(i)
+            else:
+                got.append(p)
+    ivs = sorted((p.offset, p.offset + p.size) for p in got)
+    pos = 0
+    for a, b in ivs:
+        assert a == pos
+        pos = b
+    assert pos == 1000
+
+
+# ---------------------------------------------------------------- workloads
+
+def test_poisson_arrivals_rate_and_order():
+    rng = np.random.default_rng(0)
+    arr = poisson_arrivals(4000, 50.0, rng)
+    assert len(arr) == 4000
+    assert all(b >= a for a, b in zip(arr, arr[1:]))
+    mean_gap = arr[-1] / len(arr)
+    assert mean_gap == pytest.approx(1 / 50.0, rel=0.1)
+
+
+def test_bursty_arrivals_sorted_and_bursty():
+    rng = np.random.default_rng(0)
+    arr = bursty_arrivals(2000, 50.0, rng, burst=5.0)
+    assert len(arr) == 2000
+    assert all(b >= a for a, b in zip(arr, arr[1:]))
+    # burstiness: inter-arrival CV well above the exponential's 1.0
+    gaps = np.diff(arr)
+    assert gaps.std() / gaps.mean() > 1.2
+
+
+def test_trace_arrivals_validation():
+    assert trace_arrivals([0.0, 1.0, 1.0, 2.5]) == [0.0, 1.0, 1.0, 2.5]
+    with pytest.raises(ValueError):
+        trace_arrivals([0.0, 2.0, 1.0])
+
+
+def test_request_queue_open_loop_release():
+    reqs = make_requests([0.0, 0.5, 1.0, 1.5], slo=1.0)
+    q = RequestQueue(reqs)
+    assert q.preview().rid == 0
+    assert [r.rid for r in q.poll(0.6)] == [0, 1]
+    assert q.next_arrival() == 1.0
+    assert q.poll(0.6) == []            # no re-release
+    assert [r.rid for r in q.poll(10.0)] == [2, 3]
+    assert q.next_arrival() is None
+
+
+# ------------------------------------------------------------------- stats
+
+def test_percentile_interpolation():
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == pytest.approx(2.5)
+    assert percentile([5.0], 99) == 5.0
+    assert math.isnan(percentile([], 50))
+
+
+def test_summarize_accounting():
+    reqs = make_requests([0.0, 0.0, 0.0, 0.0], slo=1.0)
+    reqs[0].finish = 0.5                 # on time
+    reqs[1].finish = 2.0                 # late
+    reqs[2].shed = True                  # shed
+    reqs[3].finish = 0.9                 # on time
+    st = summarize(reqs, duration=2.0)
+    assert (st.n_requests, st.served, st.shed, st.missed) == (4, 3, 1, 1)
+    assert st.slo_attainment == pytest.approx(0.5)
+    assert st.goodput_wg_s == pytest.approx(2 / 2.0)
+    assert st.throughput_wg_s == pytest.approx(3 / 2.0)
+
+
+# -------------------------------------------------------- open-loop simulator
+
+def _fleet(n=4, thr=25.0):
+    return [SimDevice(f"r{i}", thr) for i in range(n)]
+
+
+def _reqs(n, rate, slo, seed=0):
+    rng = np.random.default_rng(seed)
+    return make_requests(poisson_arrivals(n, rate, rng), slo=slo)
+
+
+@pytest.mark.parametrize("sched", ["static", "dynamic", "hguided",
+                                   "hguided_opt", "hguided_deadline"])
+def test_sim_open_loop_conservation_and_causality(sched):
+    reqs = _reqs(300, 60.0, slo=0.5)
+    cfg = SimConfig(scheduler=sched, opt_init=True, opt_buffers=True,
+                    host_cost_per_packet=1e-4)
+    res = simulate_serving(reqs, 1, _fleet(), cfg, policy="shed")
+    assert not res.all_dead
+    for r in reqs:                        # every request accounted for once
+        assert r.shed or r.finish is not None
+        if r.finish is not None and not r.shed:
+            assert r.finish > r.arrival   # open loop: service after arrival
+    assert res.rounds > 1                 # genuinely incremental dispatch
+    assert res.duration >= max(r.arrival for r in reqs if not r.shed)
+
+
+def test_sim_underload_meets_slo():
+    reqs = _reqs(200, 30.0, slo=1.0)      # 30% of fleet capacity
+    cfg = SimConfig(scheduler="hguided_opt", opt_init=True, opt_buffers=True,
+                    host_cost_per_packet=1e-4)
+    simulate_serving(reqs, 1, _fleet(), cfg)
+    st = summarize(reqs)
+    assert st.shed == 0
+    assert st.slo_attainment > 0.99
+
+
+def test_sim_overload_sheds_and_protects_survivors():
+    mk = lambda: _reqs(400, 300.0, slo=0.3)      # 3x fleet capacity
+    cfg = SimConfig(scheduler="hguided_deadline", opt_init=True,
+                    opt_buffers=True, host_cost_per_packet=1e-4)
+    shed_reqs = mk()
+    simulate_serving(shed_reqs, 1, _fleet(), cfg, policy="shed")
+    st_shed = summarize(shed_reqs)
+    none_reqs = mk()
+    simulate_serving(none_reqs, 1, _fleet(), cfg, policy="none")
+    st_none = summarize(none_reqs)
+    assert st_shed.shed > 0
+    # shedding doomed work must not cost on-time completions, and the
+    # survivors' tail must be tighter than the unprotected queue's
+    assert st_shed.slo_attainment >= st_none.slo_attainment
+    assert st_shed.p99_latency < st_none.p99_latency
+
+
+def test_sim_guided_beats_static_under_heterogeneity():
+    devs_spec = [50.0, 25.0, 12.5]       # 2x steps, biased profile below
+
+    def fleet():
+        devs = [SimDevice(f"r{i}", t, jitter=0.1) for i, t in
+                enumerate(devs_spec)]
+        devs[0].profile_bias = 0.6       # profile badly underrates the GPU
+        devs[2].straggle_at = 0.5
+        devs[2].straggle_factor = 0.3
+        return devs
+
+    atts = {}
+    for sched in ("static", "hguided_opt", "hguided_deadline"):
+        att = []
+        for seed in range(3):
+            reqs = _reqs(300, 70.0, slo=0.4, seed=seed)
+            cfg = SimConfig(scheduler=sched, opt_init=True, opt_buffers=True,
+                            host_cost_per_packet=1e-4, seed=seed)
+            simulate_serving(reqs, 1, fleet(), cfg, policy="shed",
+                             batch_window_s=0.05, round_quantum_s=0.05)
+            att.append(summarize(reqs).slo_attainment)
+        atts[sched] = sum(att) / len(att)
+    assert atts["hguided_opt"] > atts["static"]
+    assert atts["hguided_deadline"] > atts["static"]
+
+
+def test_sim_device_failure_work_survives():
+    devs = _fleet(3)
+    devs[1].fail_at = 0.5                # dies mid-stream
+    reqs = _reqs(200, 50.0, slo=2.0)
+    cfg = SimConfig(scheduler="hguided_opt", opt_init=True, opt_buffers=True,
+                    host_cost_per_packet=1e-4)
+    res = simulate_serving(reqs, 1, devs, cfg, policy="none")
+    assert not res.all_dead
+    for r in reqs:                       # survivors absorbed everything
+        assert r.finish is not None and not r.shed
+        assert r.replica != "r1" or r.finish <= 0.5 + 1.0
+
+
+def test_sim_all_dead_sheds_remaining():
+    devs = _fleet(2)
+    for d in devs:
+        d.fail_at = 0.2
+    reqs = _reqs(100, 100.0, slo=5.0)
+    cfg = SimConfig(scheduler="dynamic", opt_init=True, opt_buffers=True)
+    res = simulate_serving(reqs, 1, devs, cfg, policy="none")
+    assert res.all_dead
+    assert all(r.shed or r.finish is not None for r in reqs)
+    assert any(r.shed for r in reqs)
+
+
+# ------------------------------------------------------- threaded CoexecServer
+
+@pytest.fixture(scope="module")
+def smoke_serving():
+    import jax
+    from repro.configs import get_smoke
+    from repro.models import transformer as T
+    from repro.serve import Replica
+    cfg = get_smoke("llama3.2-1b")
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (8, 16)).astype(np.int32)
+    return cfg, params, prompts, Replica
+
+
+def test_server_replica_invariant_outputs(smoke_serving):
+    from repro.serve import CoexecServer, ServerConfig
+    cfg, params, prompts, Replica = smoke_serving
+    scfg = ServerConfig(scheduler="hguided_deadline", lws=2, gen=2,
+                        policy="none")
+
+    def run(replicas):
+        reqs = make_requests([0.0] * len(prompts), slo=300.0,
+                             prompt_fn=lambda i: prompts[i])
+        out = CoexecServer(replicas, scfg).run(RequestQueue(reqs))
+        assert out.stats.served == len(prompts)
+        return out
+
+    two = run([Replica("a", cfg, params), Replica("b", cfg, params,
+                                                  throttle=2.0)])
+    one = run([Replica("solo", cfg, params)])
+    assert set(two.results) == set(one.results)
+    for rid in one.results:
+        np.testing.assert_array_equal(two.results[rid], one.results[rid])
+    assert sum(two.stats.dispatch.values()) == len(prompts)
+
+
+def test_server_sheds_on_predicted_miss(smoke_serving):
+    from repro.serve import CoexecServer, ServerConfig
+    cfg, params, prompts, Replica = smoke_serving
+    reqs = make_requests([0.0] * len(prompts), slo=1e-3,
+                         prompt_fn=lambda i: prompts[i])
+    server = CoexecServer(
+        [Replica("a", cfg, params)],
+        ServerConfig(scheduler="hguided_deadline", lws=2, gen=2,
+                     policy="shed"),
+        initial_power={"a": 1.0})        # calibrated: 1 req/s, SLO 1 ms
+    out = server.run(RequestQueue(reqs))
+    assert out.stats.shed > 0
+    assert out.stats.shed + out.stats.served == len(prompts)
+    for r in out.requests:
+        if r.shed:
+            assert r.finish is None and r.rid not in out.results
+
+
+def test_server_degrade_policy_reduces_generation(smoke_serving):
+    from repro.serve import CoexecServer, ServerConfig
+    cfg, params, prompts, Replica = smoke_serving
+    reqs = make_requests([0.0] * len(prompts), slo=2.0,
+                         prompt_fn=lambda i: prompts[i])
+    server = CoexecServer(
+        [Replica("a", cfg, params)],
+        ServerConfig(scheduler="hguided_deadline", lws=2, gen=4,
+                     policy="degrade", min_gen=1),
+        initial_power={"a": 2.0})        # too slow for 8 reqs x 4 tokens
+    out = server.run(RequestQueue(reqs))
+    assert out.stats.shed == 0           # degrade never drops
+    assert out.stats.degraded > 0
+    degraded = [r for r in out.requests if r.degraded]
+    assert all(len(out.results[r.rid]) < 4 for r in degraded)
