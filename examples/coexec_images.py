@@ -1,15 +1,23 @@
 """Co-execute the paper's Gaussian-blur workload across three heterogeneous
-device groups with every scheduler; verify exactness and show the paper's
-metrics (balance / speedup / efficiency) on the real threaded Engine.
+device groups through the tiered API: Tier-1 ``coexec`` for the scheduler
+comparison, Tier-2 ``EngineSession`` for async submits that amortize init
+cost; verify exactness and show the paper's metrics (balance / speedup /
+efficiency proxies) on the real threaded dispatch engine.
 
     PYTHONPATH=src python examples/coexec_images.py
 """
 import numpy as np
 
+from repro.api import EngineSession, coexec
 from repro.core import metrics as M
 from repro.core import programs as P
 from repro.core.device import DeviceGroup
-from repro.core.runtime import Engine
+
+
+def devices3():
+    return [DeviceGroup("cpu", throttle=4.0),
+            DeviceGroup("igpu", throttle=2.0),
+            DeviceGroup("gpu", throttle=1.0)]
 
 
 def main():
@@ -20,28 +28,39 @@ def main():
           f"{'packets':>9s}{'balance':>9s}{'exact':>7s}")
     for sched in ("static", "static_rev", "dynamic", "hguided",
                   "hguided_opt"):
-        devs = [DeviceGroup("cpu", throttle=4.0),
-                DeviceGroup("igpu", throttle=2.0),
-                DeviceGroup("gpu", throttle=1.0)]
         prog = P.PROGRAMS["gaussian"](**kw)
-        eng = Engine(prog, devs, scheduler=sched,
+        res = coexec(prog, devices3(), scheduler=sched,
                      scheduler_kwargs={"n_packets": 16}
                      if sched == "dynamic" else {})
-        res = eng.run()
         exact = np.allclose(res.output, ref, rtol=1e-5, atol=1e-5)
         print(f"{sched:14s}{res.total_time*1e3:9.1f}"
               f"{res.binary_time*1e3:11.1f}{len(res.packets):9d}"
               f"{M.balance(res):9.3f}{str(exact):>7s}")
 
-    # fault tolerance: the fastest group dies mid-run
-    devs = [DeviceGroup("cpu", throttle=4.0),
-            DeviceGroup("igpu", throttle=2.0),
-            DeviceGroup("gpu", throttle=1.0, fail_after=1)]
-    eng = Engine(P.PROGRAMS["gaussian"](**kw), devs, scheduler="hguided_opt")
-    res = eng.run()
+    # Tier-2: one session, many submits — executables are cached, so the
+    # (emulated 131 ms/device) init cost is paid once; RunHandles let the
+    # caller overlap its own work with in-flight runs
+    print("\nEngineSession: 3 async submits of the same program "
+          "(init cost paid once)")
+    with EngineSession(devices3(), init_cost_s=0.131) as session:
+        prog = P.PROGRAMS["gaussian"](**kw)
+        handles = [session.submit(prog) for _ in range(3)]
+        for i, h in enumerate(handles):            # overlap prep with runs
+            res = h.result()
+            exact = np.allclose(res.output, ref, rtol=1e-5, atol=1e-5)
+            print(f"  submit {i}: binary={res.binary_time*1e3:7.1f}ms "
+                  f"exact={exact}")
+        print(f"  executable builds (init payments): "
+              f"{session.init_payments} (= 3 devices, not 9)")
+
+    # fault tolerance: the fastest group dies mid-run; its packet is
+    # requeued (same seq, retried=True) and survivors absorb the work
+    devs = devices3()
+    devs[2].fail_after = 1
+    res = coexec(P.PROGRAMS["gaussian"](**kw), devs)
     exact = np.allclose(res.output, ref, rtol=1e-5, atol=1e-5)
     print(f"\nwith gpu failure mid-run: output exact={exact} "
-          f"(packets requeued to survivors)")
+          f"({res.retries} packet(s) requeued to survivors)")
 
 
 if __name__ == "__main__":

@@ -88,6 +88,7 @@ def main():
     restored, at = CK.restore(state, ckdir)
     restored = jax.tree.map(jax.numpy.asarray, restored)
     state2, rep = trainer.step(restored, steps)
+    trainer.close()
     print(f"\nrestart from step {at}: next loss {rep.loss:.4f}")
     print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"({'improved' if losses[-1] < losses[0] else 'NOT improved'})")

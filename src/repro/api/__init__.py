@@ -1,0 +1,30 @@
+"""The tiered co-execution API (EngineCL's usability thesis, in JAX).
+
+Three tiers, increasing control:
+
+  * **Tier-1** ``coexec(program, devices=...)`` — single call, paper-tuned
+    defaults (HGuidedOpt, parallel init, registered buffers).
+  * **Tier-2** ``EngineSession`` — executable cache, buffer registry and
+    elastic device membership shared across many programs;
+    ``session.submit(program) -> RunHandle`` (``.result()``, ``.done()``,
+    ``.cancel()``) overlaps input prep with in-flight runs.
+  * **Tier-3** extension points — ``register_scheduler`` (plugin registry),
+    ``DevicePolicy`` (discovery/ordering), ``BufferPolicy`` (Runtime
+    buffer handling).
+
+See docs/api.md for the tier table and the ``Engine`` migration guide.
+"""
+from repro.api.handles import CancelledError, RunHandle
+from repro.api.policies import BufferPolicy, DevicePolicy, StaticDevicePolicy
+from repro.api.session import EngineSession
+from repro.api.tier1 import coexec
+from repro.core.runtime import Program
+from repro.core.scheduler import (available_schedulers, register_scheduler,
+                                  scheduler_accepts, unregister_scheduler)
+
+__all__ = [
+    "BufferPolicy", "CancelledError", "DevicePolicy", "EngineSession",
+    "Program", "RunHandle", "StaticDevicePolicy", "available_schedulers",
+    "coexec", "register_scheduler", "scheduler_accepts",
+    "unregister_scheduler",
+]

@@ -1,0 +1,98 @@
+"""RunHandle: the future-like handle returned by ``EngineSession.submit``.
+
+Deliberately a subset of ``concurrent.futures.Future`` (result / done /
+cancel / exception) so callers can overlap input preparation with in-flight
+runs — exactly as the paper's init optimization overlaps compiles — without
+learning a new waiting idiom.  ``CancelledError`` is the standard library's.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import CancelledError
+from typing import Any, Optional
+
+__all__ = ["CancelledError", "RunHandle"]
+
+_PENDING = "pending"
+_RUNNING = "running"
+_DONE = "done"
+_CANCELLED = "cancelled"
+
+
+class RunHandle:
+    """Handle for one submitted program; created only by EngineSession."""
+
+    def __init__(self, program_name: str, seq: int):
+        self.program_name = program_name
+        self.seq = seq                       # session-wide submit index
+        self._lock = threading.Lock()
+        self._event = threading.Event()
+        self._state = _PENDING
+        self._result: Any = None
+        self._exception: Optional[BaseException] = None
+
+    # -- caller side --------------------------------------------------------
+    def done(self) -> bool:
+        """True once the run finished, errored, or was cancelled."""
+        return self._event.is_set()
+
+    def running(self) -> bool:
+        return self._state == _RUNNING
+
+    def cancelled(self) -> bool:
+        return self._state == _CANCELLED
+
+    def cancel(self) -> bool:
+        """Cancel if still queued.  Returns False once dispatch started —
+        in-flight co-execution is not interrupted (packets already carved
+        must commit exactly once)."""
+        with self._lock:
+            if self._state != _PENDING:
+                return False
+            self._state = _CANCELLED
+        self._event.set()
+        return True
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until the RunResult is ready; re-raises run errors."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"run of {self.program_name!r} not done after {timeout}s")
+        if self._state == _CANCELLED:
+            raise CancelledError(f"run of {self.program_name!r} cancelled")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"run of {self.program_name!r} not done after {timeout}s")
+        if self._state == _CANCELLED:
+            raise CancelledError(f"run of {self.program_name!r} cancelled")
+        return self._exception
+
+    # -- session side -------------------------------------------------------
+    def _start(self) -> bool:
+        """Dispatcher claims the handle; False if it was cancelled first."""
+        with self._lock:
+            if self._state != _PENDING:
+                return False
+            self._state = _RUNNING
+            return True
+
+    def _set_result(self, result) -> None:
+        with self._lock:
+            self._result = result
+            self._state = _DONE
+        self._event.set()
+
+    def _set_exception(self, exc: BaseException) -> None:
+        with self._lock:
+            self._exception = exc
+            self._state = _DONE
+        self._event.set()
+
+    def __repr__(self) -> str:
+        return (f"RunHandle({self.program_name!r}, seq={self.seq}, "
+                f"state={self._state})")

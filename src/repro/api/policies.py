@@ -1,0 +1,75 @@
+"""Tier-3 extension points: buffer and device policies.
+
+Schedulers have their own Tier-3 hook — ``repro.core.scheduler.
+register_scheduler`` — so all three of the paper's architectural roles
+(Runtime buffers, device discovery, load balancing) are extensible without
+touching the session.
+"""
+from __future__ import annotations
+
+import enum
+from typing import List, Sequence
+
+from repro.core.device import DeviceGroup
+
+
+class BufferPolicy(enum.Enum):
+    """How the Runtime feeds inputs and commits outputs (formalizes the old
+    boolean ``opt_buffers``).
+
+    * ``REGISTERED`` — the paper's optimization: inputs are registered once
+      per device as read-only buffers (zero-copy slice views feed each
+      packet), outputs are committed in place into a preallocated result.
+    * ``PER_PACKET`` — the worst practice the paper's drivers exhibited:
+      every packet bulk-copies, results are assembled from per-packet
+      copies at the end.  Kept as a measurable baseline.
+    """
+    REGISTERED = "registered"
+    PER_PACKET = "per_packet"
+
+    @classmethod
+    def from_flag(cls, opt_buffers: bool) -> "BufferPolicy":
+        return cls.REGISTERED if opt_buffers else cls.PER_PACKET
+
+    @property
+    def registered(self) -> bool:
+        return self is BufferPolicy.REGISTERED
+
+
+class DevicePolicy:
+    """Device discovery + ordering hook.
+
+    The default discovers one DeviceGroup per visible JAX device and keeps
+    the backend's order.  Subclass to pin custom fleets (throttled groups,
+    mesh sub-slices, remote executors) or to reorder (e.g. weakest-first so
+    Static delivery matches the paper's CPU,iGPU,GPU layout).
+    """
+
+    def discover(self) -> List[DeviceGroup]:
+        import jax
+        return [DeviceGroup(f"{d.platform}{i}", device=d)
+                for i, d in enumerate(jax.devices())]
+
+    def order(self, devices: Sequence[DeviceGroup]) -> List[DeviceGroup]:
+        return list(devices)
+
+    def resolve(self, devices=None) -> List[DeviceGroup]:
+        """Explicit devices win; otherwise discover.  Always ordered."""
+        devs = list(devices) if devices is not None else self.discover()
+        devs = self.order(devs)
+        if not devs:
+            raise ValueError("DevicePolicy produced no devices")
+        names = [d.name for d in devs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate device names: {names}")
+        return devs
+
+
+class StaticDevicePolicy(DevicePolicy):
+    """A fixed, pre-built fleet (the common case in tests/benchmarks)."""
+
+    def __init__(self, devices: Sequence[DeviceGroup]):
+        self._devices = list(devices)
+
+    def discover(self) -> List[DeviceGroup]:
+        return list(self._devices)

@@ -1,0 +1,268 @@
+"""Tier-2: EngineSession — one session, many programs, reused primitives.
+
+The paper's optimizations only pay off when costly primitives (compiled
+executables, registered buffers) are *reused across runs*.  The session is
+where that reuse lives:
+
+  * an **executable cache** keyed by (program, device) — back-to-back
+    submits of the same program pay ``init_cost_s`` at most once per device
+    per session, not once per run;
+  * a **buffer registry** recording which (program, device) pairs have
+    registered input buffers (``BufferPolicy.REGISTERED`` commits outputs
+    in place against them);
+  * **elastic device membership** across runs (``add_device`` /
+    ``remove_device`` renormalize scheduler powers on the next submit);
+  * a **WorkerPool** of device threads reused run-to-run;
+  * an async **submit queue**: ``submit(program) -> RunHandle`` returns
+    immediately, so callers overlap input preparation with in-flight runs
+    exactly as the init optimization overlaps compiles.  Submitted programs
+    dispatch strictly in order (one co-execution owns the fleet at a time —
+    the paper's co-execution model), but never block the submitting thread.
+
+Blocking callers use ``session.run(program)`` or Tier-1
+``coexec(program, devices=...)``.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.device import DeviceGroup
+from repro.core.metrics import RunResult
+from repro.core.runtime import Program, WorkerPool, _RunContext
+from repro.core.scheduler import scheduler_spec
+from repro.api.handles import RunHandle
+from repro.api.policies import BufferPolicy, DevicePolicy
+
+
+@dataclass
+class _Submission:
+    """Everything one queued run needs, captured at submit time."""
+    program: Program
+    powers: Optional[List[float]]
+    scheduler: str
+    scheduler_kwargs: Dict
+    cache: bool
+    collect: Optional[Callable]
+    handle: RunHandle = field(default=None)  # type: ignore[assignment]
+
+
+class EngineSession:
+    """A long-lived co-execution session over an elastic device fleet."""
+
+    def __init__(self, devices: Optional[Sequence[DeviceGroup]] = None, *,
+                 scheduler: str = "hguided_opt",
+                 scheduler_kwargs: Optional[Dict] = None,
+                 buffer_policy: BufferPolicy = BufferPolicy.REGISTERED,
+                 device_policy: Optional[DevicePolicy] = None,
+                 parallel_init: bool = True,
+                 cache_executables: bool = True,
+                 init_cost_s: float = 0.0,
+                 reset_device_stats: bool = True,
+                 name: str = "session"):
+        scheduler_spec(scheduler)            # fail fast on unknown names
+        self.device_policy = device_policy or DevicePolicy()
+        self._devices: List[DeviceGroup] = \
+            self.device_policy.resolve(devices)
+        self.scheduler = scheduler
+        self.scheduler_kwargs = dict(scheduler_kwargs or {})
+        self.buffer_policy = buffer_policy
+        self.parallel_init = parallel_init
+        self.cache_executables = cache_executables
+        # emulated fixed driver-primitive cost paid per executable build;
+        # the cache amortizes it across submits (paper's init optimization)
+        self.init_cost_s = init_cost_s
+        self.reset_device_stats = reset_device_stats
+        self.name = name
+
+        self._executables: Dict[Tuple[str, str], Callable] = {}
+        self._buffer_registry: Dict[Tuple[str, str], int] = {}
+        self.init_payments = 0               # executable builds performed
+        self._lock = threading.Lock()
+
+        self._pool = WorkerPool(name=name)
+        self._queue: "collections.deque[_Submission]" = collections.deque()
+        self._cv = threading.Condition()
+        self._closing = False
+        self._seq = 0
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name=f"{name}-dispatch", daemon=True)
+        self._dispatcher.start()
+
+    # -- elastic membership --------------------------------------------------
+    @property
+    def devices(self) -> List[DeviceGroup]:
+        with self._lock:
+            return list(self._devices)
+
+    def add_device(self, dev: DeviceGroup) -> None:
+        with self._lock:
+            if any(d.name == dev.name for d in self._devices):
+                raise ValueError(f"device {dev.name!r} already in session")
+            self._devices.append(dev)
+
+    def remove_device(self, name: str) -> None:
+        with self._lock:
+            self._devices = [d for d in self._devices if d.name != name]
+            for key in [k for k in self._executables if k[1] == name]:
+                del self._executables[key]
+            for key in [k for k in self._buffer_registry if k[1] == name]:
+                del self._buffer_registry[key]
+
+    # -- caches --------------------------------------------------------------
+    @property
+    def executables(self) -> Dict[Tuple[str, str], Callable]:
+        """(program_name, device_name) -> compiled range executable."""
+        with self._lock:
+            return dict(self._executables)
+
+    @property
+    def buffer_registry(self) -> Dict[Tuple[str, str], int]:
+        """(program_name, device_name) -> number of buffer registrations
+        for cached programs (1 everywhere means full reuse)."""
+        with self._lock:
+            return dict(self._buffer_registry)
+
+    def evict(self, program_name: str) -> None:
+        """Drop a program's cached executables/buffers (all devices)."""
+        with self._lock:
+            for key in [k for k in self._executables
+                        if k[0] == program_name]:
+                del self._executables[key]
+            for key in [k for k in self._buffer_registry
+                        if k[0] == program_name]:
+                del self._buffer_registry[key]
+
+    def _compile_for(self, program: Program, dev: DeviceGroup,
+                     cache: bool) -> Callable:
+        key = (program.name, dev.name)
+        if cache:
+            with self._lock:
+                fn = self._executables.get(key)
+            if fn is not None:
+                return fn
+        if self.init_cost_s:
+            time.sleep(self.init_cost_s)      # driver primitive cost
+        fn = program.build(dev)
+        with self._lock:
+            self.init_payments += 1
+            if cache and self.cache_executables:
+                # ephemeral (cache=False) programs must not grow the
+                # registries: a serving session submits one uniquely-named
+                # round program per dispatch round
+                self._executables[key] = fn
+                self._buffer_registry[key] = \
+                    self._buffer_registry.get(key, 0) + 1
+        return fn
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, program: Program, *,
+               powers: Optional[List[float]] = None,
+               scheduler: Optional[str] = None,
+               scheduler_kwargs: Optional[Dict] = None,
+               collect: Optional[Callable] = None,
+               cache: bool = True) -> RunHandle:
+        """Enqueue a program; returns a future-like RunHandle immediately.
+
+        ``powers`` overrides the per-device computing powers for this run;
+        ``scheduler``/``scheduler_kwargs`` override the session defaults
+        (e.g. a serving round's rotated Static order or deadline slack) —
+        overriding the scheduler DROPS the session-level kwargs, which were
+        tuned for a different class; ``collect(packet, result, device)``
+        replaces array output assembly for reduction-style programs
+        (called under the run's commit lock); ``cache=False`` skips the
+        executable cache for ephemeral programs.
+        """
+        program.validate()
+        if scheduler is not None:
+            scheduler_spec(scheduler)        # fail fast, not in dispatcher
+        if scheduler_kwargs is not None:
+            skw = dict(scheduler_kwargs)
+        elif scheduler is None or scheduler == self.scheduler:
+            skw = dict(self.scheduler_kwargs)
+        else:
+            skw = {}
+        sub = _Submission(
+            program=program, powers=powers,
+            scheduler=scheduler or self.scheduler,
+            scheduler_kwargs=skw,
+            cache=cache, collect=collect)
+        with self._cv:
+            if self._closing:
+                raise RuntimeError(f"session {self.name!r} is closed")
+            sub.handle = RunHandle(program.name, self._seq)
+            self._seq += 1
+            self._queue.append(sub)
+            self._cv.notify()
+        return sub.handle
+
+    def run(self, program: Program, **kw) -> RunResult:
+        """Blocking convenience: ``submit(...).result()``."""
+        return self.submit(program, **kw).result()
+
+    # -- dispatch ------------------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closing:
+                    self._cv.wait()
+                if not self._queue:
+                    return                    # closing and drained
+                sub = self._queue.popleft()
+            if not sub.handle._start():
+                continue                      # cancelled while queued
+            try:
+                sub.handle._set_result(self._execute(sub))
+            except BaseException as e:        # surfaced via handle.result()
+                sub.handle._set_exception(e)
+
+    def _execute(self, sub: _Submission) -> RunResult:
+        with self._lock:
+            devices = [d for d in self._devices
+                       if self.reset_device_stats or not d.dead]
+        if not devices:
+            raise RuntimeError(
+                f"{sub.program.name}: session has no live devices")
+        if sub.powers is not None and len(sub.powers) != len(devices):
+            raise ValueError(
+                f"{sub.program.name}: got {len(sub.powers)} powers for "
+                f"{len(devices)} devices")
+        ctx = _RunContext(
+            sub.program, devices,
+            scheduler=sub.scheduler,
+            scheduler_kwargs=sub.scheduler_kwargs,
+            compile_fn=lambda dev: self._compile_for(sub.program, dev,
+                                                     sub.cache),
+            pool=self._pool,
+            registered_buffers=self.buffer_policy.registered,
+            parallel_init=self.parallel_init,
+            reset_device_stats=self.reset_device_stats,
+            powers=sub.powers,
+            collect=sub.collect)
+        return ctx.execute()
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Drain queued runs, stop the dispatcher, release the pool."""
+        with self._cv:
+            if self._closing:
+                return
+            self._closing = True
+            self._cv.notify_all()
+        self._dispatcher.join()
+        self._pool.close()
+
+    def __enter__(self) -> "EngineSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        return (f"EngineSession({self.name!r}, devices="
+                f"{[d.name for d in self.devices]}, "
+                f"scheduler={self.scheduler!r}, "
+                f"cached={len(self._executables)})")

@@ -1,0 +1,42 @@
+"""Tier-1: ``coexec`` — one call, paper-tuned defaults.
+
+Hides scheduler and optimization choices behind the configuration the
+paper found best: HGuidedOpt balancing, parallel init with executable
+caching, registered buffers.  For reuse across runs (where the paper's
+optimizations actually pay off), hold an ``EngineSession`` instead.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.device import DeviceGroup
+from repro.core.metrics import RunResult
+from repro.core.runtime import Program
+from repro.api.policies import BufferPolicy, DevicePolicy
+from repro.api.session import EngineSession
+
+
+def coexec(program: Program,
+           devices: Optional[Sequence[DeviceGroup]] = None, *,
+           scheduler: str = "hguided_opt",
+           scheduler_kwargs: Optional[Dict] = None,
+           powers: Optional[List[float]] = None,
+           buffer_policy: BufferPolicy = BufferPolicy.REGISTERED,
+           device_policy: Optional[DevicePolicy] = None,
+           parallel_init: bool = True,
+           init_cost_s: float = 0.0) -> RunResult:
+    """Co-execute ``program`` across ``devices`` and return its RunResult.
+
+    ``devices=None`` discovers the fleet via ``device_policy`` (default:
+    one group per visible JAX device).  The result's ``output`` attribute
+    holds the assembled array, bit-identical to a single-device run.
+    """
+    with EngineSession(devices,
+                       scheduler=scheduler,
+                       scheduler_kwargs=scheduler_kwargs,
+                       buffer_policy=buffer_policy,
+                       device_policy=device_policy,
+                       parallel_init=parallel_init,
+                       init_cost_s=init_cost_s,
+                       name=f"coexec[{program.name}]") as session:
+        return session.submit(program, powers=powers).result()

@@ -1,12 +1,13 @@
 """Heterogeneity-aware data-parallel training (the paper's co-execution as
 a first-class training-framework feature).
 
-Each training step is a co-execution of one global batch: the batch's row
-range is the work queue (1 work-group = ``lws`` rows = the minimum
-microbatch), device groups pull row-range packets HGuided-style in
-proportion to their EWMA-measured throughput, and gradients are combined
-weighted by the tokens each group actually processed.  Consequences, by
-construction:
+Each training step is a co-execution of one global batch submitted to an
+``EngineSession``: the batch's row range is the work queue (1 work-group =
+``lws`` rows = the minimum microbatch), device groups pull row-range packets
+HGuided-style in proportion to their EWMA-measured throughput, and gradients
+are combined weighted by the tokens each group actually processed (the
+session's ``collect`` hook replaces array output assembly).  Consequences,
+by construction:
 
   * straggler mitigation — a slow/throttled group takes fewer packets and
     everyone finishes the step together (the paper's balance ~= 1);
@@ -18,7 +19,10 @@ construction:
   * optional int8 error-feedback compression on the gradient combine
     (the cross-pod hop at datacenter scale).
 
-On a real multi-pod deployment each DeviceGroup is a pod sub-slice and the
+The trainer's session keeps per-group state across steps
+(``reset_device_stats=False``): throughput EWMAs carry into the next step's
+profiles and a failed group stays excluded until removed/replaced.  On a
+real multi-pod deployment each DeviceGroup is a pod sub-slice and the
 combine is a weighted all-reduce over the ``pod`` axis; in this container
 groups are CPU executors (optionally throttled) and the combine is local.
 The DES twin (core/simulate.py + benchmarks/scale1000.py) runs the same
@@ -26,18 +30,17 @@ scheduler logic at 1024-group scale.
 """
 from __future__ import annotations
 
-import threading
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.api.session import EngineSession
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.device import DeviceFailure, DeviceGroup
-from repro.core.scheduler import DeviceProfile, make_scheduler
+from repro.core.device import DeviceGroup
+from repro.core.runtime import Program
 from repro.data.pipeline import SyntheticPipeline
 from repro.optim import adamw, compress as C
 from repro.optim.adamw import OptConfig, TrainState
@@ -63,11 +66,14 @@ class HeteroDPTrainer:
         self.cfg = cfg
         self.opt = opt
         self.shape = shape
-        self.devices = list(devices)
         self.pipeline = pipeline
-        self.scheduler_name = scheduler
         self.lws = lws
         self.compress = compress
+        # the session keeps cross-step device state: throughput EWMAs feed
+        # the next step's profiles, dead groups stay excluded
+        self.session = EngineSession(devices, scheduler=scheduler,
+                                     reset_device_stats=False,
+                                     name="hetero_dp")
         loss_fn = make_loss_fn(cfg)
 
         def grad_fn(params, batch):
@@ -79,79 +85,58 @@ class HeteroDPTrainer:
         self._err = None      # compression error-feedback buffers
 
     # -- elastic membership -------------------------------------------------
+    @property
+    def devices(self) -> List[DeviceGroup]:
+        return self.session.devices
+
     def add_device(self, dev: DeviceGroup) -> None:
-        self.devices.append(dev)
+        self.session.add_device(dev)
 
     def remove_device(self, name: str) -> None:
-        self.devices = [d for d in self.devices if d.name != name]
+        self.session.remove_device(name)
+
+    def close(self) -> None:
+        """Release the dispatch session (its dispatcher + device threads)."""
+        self.session.close()
 
     # -- one co-executed step ------------------------------------------------
-    def step(self, state: TrainState, step_idx: int) -> Tuple[TrainState, StepReport]:
+    def step(self, state: TrainState,
+             step_idx: int) -> Tuple[TrainState, StepReport]:
         B = self.shape.global_batch
         assert B % self.lws == 0
         G = B // self.lws
-        alive = [d for d in self.devices if not d.dead]
-        profiles = [DeviceProfile(d.name, d.throughput or 1.0 / d.throttle)
-                    for d in alive]
-        sched = make_scheduler(self.scheduler_name, G, 1, profiles)
-        lock = threading.Lock()
-        acc = {"g": None, "loss": 0.0, "rows": 0, "packets": 0}
+        alive = [d for d in self.session.devices if not d.dead]
+        acc = {"g": None, "loss": 0.0, "rows": 0}
         rows_by_dev: Dict[str, int] = {d.name: 0 for d in alive}
-        state_inflight = {"n": 0}
-        t0 = time.perf_counter()
+        lws = self.lws
 
-        def worker(i: int):
-            dev = alive[i]
-            while True:
-                with lock:
-                    pkt = sched.next_packet(i)
-                    if pkt is not None:
-                        state_inflight["n"] += 1
-                if pkt is None:
-                    with lock:
-                        done = state_inflight["n"] == 0 and sched.remaining() == 0
-                        others = any(not d.dead for j, d in enumerate(alive)
-                                     if j != i)
-                    if done or not others:
-                        return
-                    time.sleep(1e-3)
-                    continue
-                rows = slice(pkt.offset * self.lws,
-                             (pkt.offset + pkt.size) * self.lws)
+        def build(dev: DeviceGroup):
+            def fn(offset: int, size: int):
+                rows = slice(offset * lws, (offset + size) * lws)
                 batch = self.pipeline.batch_at(step_idx, rows=rows)
                 batch = {k: dev.put(jnp.asarray(v)) for k, v in batch.items()}
-                try:
-                    (loss, g), wg_s = dev.run_packet(
-                        lambda off, size: self._grad(state.params, batch),
-                        pkt.offset, pkt.size)
-                except DeviceFailure:
-                    with lock:
-                        sched.requeue(pkt)
-                        state_inflight["n"] -= 1
-                    return
-                if hasattr(sched, "observe"):
-                    sched.observe(i, wg_s)
-                n_rows = pkt.size * self.lws
-                with lock:
-                    w = float(n_rows)
-                    if acc["g"] is None:
-                        acc["g"] = jax.tree.map(lambda x: x * w, g)
-                    else:
-                        acc["g"] = jax.tree.map(lambda a, x: a + x * w,
-                                                acc["g"], g)
-                    acc["loss"] += float(loss) * n_rows
-                    acc["rows"] += n_rows
-                    acc["packets"] += 1
-                    rows_by_dev[dev.name] += n_rows
-                    state_inflight["n"] -= 1
+                return self._grad(state.params, batch)
+            return fn
 
-        threads = [threading.Thread(target=worker, args=(i,))
-                   for i in range(len(alive))]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        if sched.remaining() > 0 or acc["rows"] != B:
+        def collect(pkt, res, dev):
+            # runs under the run's commit lock: plain accumulation is safe
+            loss, g = res
+            n_rows = pkt.size * lws
+            w = float(n_rows)
+            if acc["g"] is None:
+                acc["g"] = jax.tree.map(lambda x: x * w, g)
+            else:
+                acc["g"] = jax.tree.map(lambda a, x: a + x * w, acc["g"], g)
+            acc["loss"] += float(loss) * n_rows
+            acc["rows"] += n_rows
+            rows_by_dev[dev.name] = rows_by_dev.get(dev.name, 0) + n_rows
+
+        prog = Program(f"hdp_step{step_idx}", G, 1, build)
+        t0 = time.perf_counter()
+        # ephemeral program: the executable closes over this step's params
+        result = self.session.submit(prog, collect=collect,
+                                     cache=False).result()
+        if acc["rows"] != B:
             raise RuntimeError(
                 f"step {step_idx}: incomplete batch ({acc['rows']}/{B})")
         grads = jax.tree.map(lambda x: x / acc["rows"], acc["g"])
@@ -161,17 +146,14 @@ class HeteroDPTrainer:
             grads, self._err = C.compress_decompress(grads, self._err)
         new_state, opt_metrics = adamw.apply_updates(state, grads, self.opt)
         dt = time.perf_counter() - t0
-        busy = [d.busy_time for d in alive]
-        fins = [b for b in busy if b > 0]
+        fins = [b for b in result.device_busy if b > 0]
         report = StepReport(
             loss=acc["loss"] / acc["rows"],
             tokens=acc["rows"] * self.shape.seq_len,
             step_time_s=dt,
             balance=(min(fins) / max(fins)) if len(fins) > 1 else 1.0,
-            packets=acc["packets"],
+            packets=len(result.packets),
             device_rows=dict(rows_by_dev),
-            failures=sum(1 for d in alive if d.dead),
+            failures=result.aborted_devices,
         )
-        for d in alive:   # reset per-step busy accounting
-            d.busy_time = 0.0
         return new_state, report

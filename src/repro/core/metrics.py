@@ -24,6 +24,12 @@ class RunResult:
     packets: List                       # executed packets (scheduler.Packet)
     binary_time: Optional[float] = None  # incl. init/teardown ("binary" mode)
     aborted_devices: int = 0
+    retries: int = 0                    # packets re-issued after a requeue
+
+    def __post_init__(self):
+        if not self.retries:
+            self.retries = sum(1 for p in self.packets
+                               if getattr(p, "retried", False))
 
 
 def balance(result: RunResult) -> float:

@@ -1,43 +1,55 @@
-"""The Engine: EngineCL's Runtime / Scheduler / Device threads in JAX.
+"""Dispatch engine: EngineCL's Runtime / Scheduler / Device threads in JAX.
 
 Mirrors the paper's Fig. 2 architecture:
 
-  * the **Runtime** (this thread) discovers executors, owns buffers and
-    orchestrates the run;
+  * the **Runtime** (the session's dispatcher, repro.api.session) discovers
+    executors, owns buffers/executable caches and orchestrates runs;
   * the **Scheduler** is the atomic packet queue (core/scheduler.py);
   * one **Device thread** per device group pulls packets, executes the
     program's range function and commits results.
 
-The paper's two runtime optimizations are implemented as real code paths,
-toggled independently so their contribution can be measured (fig6 bench):
+This module is the *internal* layer of that stack: ``Program`` (the work
+description), ``WorkerPool`` (session-scoped reusable device threads) and
+``_RunContext`` (the per-submitted-program dispatch state).  The public
+surface is the tiered API in ``repro.api``:
 
-  * ``opt_init``   — device threads start immediately and AOT-compile their
-    executables *in parallel*, overlapped with input preparation; compiled
-    executables are cached on the Engine and *reused* across runs (the
-    paper's "reuse of costly OpenCL primitives").  Without the flag,
-    discovery -> compile(dev0..devN) -> buffer setup -> scheduler start run
-    strictly sequentially and caches are dropped.
-  * ``opt_buffers`` — inputs are registered once per device as read-only
-    buffers (zero-copy slice views feed each packet; device_put happens
-    once), outputs are committed in place into a preallocated result.
-    Without the flag every packet bulk-copies the full input set and
-    results are assembled from per-packet copies at the end (the worst
-    practice the paper's drivers exhibited).
+  * Tier-1 ``coexec(program, devices=...)`` — one call, paper-tuned
+    defaults;
+  * Tier-2 ``EngineSession`` — executable cache + buffer registry + elastic
+    membership shared across *many* programs, ``submit() -> RunHandle``;
+  * Tier-3 ``register_scheduler`` / ``DevicePolicy`` / ``BufferPolicy``
+    extension points.
 
-Timing modes per the paper: ``binary`` (engine construction -> teardown)
-and ``roi`` (transfer + compute only).
+The paper's two runtime optimizations remain real, independent code paths:
 
-Fault tolerance: a device thread that raises (or whose DeviceGroup is marked
-dead) has its in-flight packet requeued; remaining devices absorb the work.
-Elastic scaling: ``add_device`` / ``remove_device`` between runs renormalize
-the scheduler's computing powers.
+  * parallel init (the old ``opt_init``) — device threads AOT-compile their
+    executables *in parallel*, overlapped with the Runtime's scheduler
+    preparation; compiled executables are cached on the session and reused
+    across submits (the paper's "reuse of costly OpenCL primitives").
+  * registered buffers (the old ``opt_buffers``, now
+    ``BufferPolicy.REGISTERED``) — inputs are registered once per device
+    (zero-copy slice views feed each packet), outputs are committed in
+    place.  ``BufferPolicy.PER_PACKET`` reproduces the worst practice the
+    paper's drivers exhibited: every packet copies, results are assembled
+    from per-packet copies at the end.
+
+Timing modes per the paper: ``binary`` (init -> teardown) and ``roi``
+(transfer + compute only).
+
+Fault tolerance: a device thread that raises (or whose DeviceGroup is
+marked dead) has its in-flight packet requeued with provenance preserved
+(same ``seq``, ``retried=True``); remaining devices absorb the work.
+
+``Engine`` remains as a deprecated one-PR compatibility shim over
+``EngineSession`` for out-of-tree users.
 """
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+import warnings
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -54,82 +66,198 @@ class Program:
     total_work: int                       # in work-groups
     lws: int                              # work-group size (alignment unit)
     # build(device_group) -> fn(offset, size) -> np.ndarray (the range result)
-    build: Callable[[DeviceGroup], Callable[[int, int], Any]] = None
+    build: Optional[Callable[[DeviceGroup], Callable[[int, int], Any]]] = None
     # output row-width: result rows per work-group (paper's "out pattern")
     out_rows_per_wg: int = 1
     out_cols: int = 1
     out_dtype: Any = np.float32
 
+    def validate(self) -> "Program":
+        """Raise a clear ValueError now instead of a TypeError deep inside a
+        device thread.  Called at session submit / engine construction."""
+        if self.build is None or not callable(self.build):
+            raise ValueError(
+                f"Program {self.name!r}: 'build' must be a callable "
+                "build(device) -> fn(offset, size); got "
+                f"{self.build!r}.  Construct Programs via "
+                "repro.core.programs or pass build= explicitly.")
+        if self.total_work <= 0:
+            raise ValueError(f"Program {self.name!r}: total_work must be "
+                             f"positive, got {self.total_work}")
+        if self.lws <= 0:
+            raise ValueError(f"Program {self.name!r}: lws must be positive, "
+                             f"got {self.lws}")
+        return self
 
-class Engine:
+
+class WorkerPool:
+    """Session-scoped pool of reusable device threads.
+
+    Device threads are *pulled from the pool* per run instead of created per
+    run: a session serving many back-to-back submits reuses the same OS
+    threads (the thread-management analogue of the paper's primitive reuse).
+
+    Deliberately NOT concurrent.futures.ThreadPoolExecutor: every run parks
+    all n device threads on one Barrier, so the pool must grow unboundedly
+    with the fleet — a bounded executor whose max_workers falls below the
+    device count would deadlock the barrier.
+    """
+
+    def __init__(self, name: str = "coexec"):
+        self._name = name
+        self._lock = threading.Lock()
+        self._idle: List["_Worker"] = []
+        self._spawned = 0
+        self._closed = False
+
+    def submit(self, fn: Callable[[], None]) -> threading.Event:
+        """Run ``fn`` on a pooled thread; returns its completion event."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("WorkerPool is closed")
+            worker = self._idle.pop() if self._idle else None
+            if worker is None:
+                self._spawned += 1
+                worker = _Worker(self, f"{self._name}-dev-{self._spawned}")
+        return worker.run(fn)
+
+    def _recycle(self, worker: "_Worker") -> None:
+        with self._lock:
+            if self._closed:
+                worker.stop()
+            else:
+                self._idle.append(worker)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            idle, self._idle = self._idle, []
+        for w in idle:
+            w.stop()
+
+    @property
+    def size(self) -> int:
+        return self._spawned
+
+
+class _Worker:
+    """One reusable pool thread: blocks on a job box, runs, recycles."""
+
+    def __init__(self, pool: WorkerPool, name: str):
+        self._pool = pool
+        self._job: Optional[Tuple[Callable[[], None], threading.Event]] = None
+        self._wake = threading.Semaphore(0)
+        self._thread = threading.Thread(target=self._loop, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    def run(self, fn: Callable[[], None]) -> threading.Event:
+        done = threading.Event()
+        self._job = (fn, done)
+        self._wake.release()
+        return done
+
+    def stop(self) -> None:
+        self._job = None
+        self._wake.release()
+
+    def _loop(self) -> None:
+        while True:
+            self._wake.acquire()
+            job, self._job = self._job, None
+            if job is None:
+                return
+            fn, done = job
+            try:
+                fn()
+            except BaseException:
+                # a job must never corpse the pool thread: device_thread
+                # handles its own errors; this is the last-resort guard that
+                # keeps a recycled worker alive for the next submit
+                pass
+            finally:
+                done.set()
+                self._pool._recycle(self)
+
+
+class _RunContext:
+    """Dispatch state for ONE submitted program (the session's inner engine).
+
+    Owns the scheduler instance, the output buffer (or a caller-supplied
+    ``collect`` hook for non-array reductions, e.g. gradient accumulation),
+    and the per-run device bookkeeping.  Device threads are pulled from the
+    session's WorkerPool; compiled executables come from ``compile_fn``
+    (the session's cache).
+    """
+
     def __init__(self, program: Program, devices: Sequence[DeviceGroup], *,
-                 scheduler: str = "hguided_opt",
-                 scheduler_kwargs: Optional[Dict] = None,
-                 opt_init: bool = True, opt_buffers: bool = True,
-                 init_cost_s: float = 0.0):
+                 scheduler: str, scheduler_kwargs: Dict,
+                 compile_fn: Callable[[DeviceGroup], Callable],
+                 pool: WorkerPool,
+                 registered_buffers: bool = True,
+                 parallel_init: bool = True,
+                 reset_device_stats: bool = True,
+                 powers: Optional[List[float]] = None,
+                 collect: Optional[Callable] = None):
         self.program = program
         self.devices = list(devices)
+        if not self.devices:
+            raise RuntimeError(f"{program.name}: no devices to dispatch to")
         self.scheduler_name = scheduler
-        self.scheduler_kwargs = dict(scheduler_kwargs or {})
-        self.opt_init = opt_init
-        self.opt_buffers = opt_buffers
-        # emulated fixed driver-primitive cost paid per (re)initialization;
-        # with opt_init it is paid once and amortized by the executable cache
-        self.init_cost_s = init_cost_s
-        self._compiled: Dict[str, Callable] = {}   # executable cache
-        self._lock = threading.Lock()
+        self.scheduler_kwargs = dict(scheduler_kwargs)
+        self.compile_fn = compile_fn
+        self.pool = pool
+        self.registered_buffers = registered_buffers
+        self.parallel_init = parallel_init
+        self.reset_device_stats = reset_device_stats
+        self.powers = list(powers) if powers is not None else None
+        self.collect = collect
 
-    # -- elastic membership -------------------------------------------------
-    def add_device(self, dev: DeviceGroup) -> None:
-        self.devices.append(dev)
-
-    def remove_device(self, name: str) -> None:
-        self.devices = [d for d in self.devices if d.name != name]
-        self._compiled.pop(name, None)
-
-    # -- init paths ----------------------------------------------------------
-    def _compile_for(self, dev: DeviceGroup) -> Callable:
-        key = dev.name
-        if self.opt_init and key in self._compiled:
-            return self._compiled[key]
-        if self.init_cost_s:
-            time.sleep(self.init_cost_s)          # driver primitive cost
-        fn = self.program.build(dev)
-        if self.opt_init:
-            self._compiled[key] = fn
-        return fn
-
-    # -- main entry ----------------------------------------------------------
-    def run(self, *, powers: Optional[List[float]] = None) -> RunResult:
+    def execute(self) -> RunResult:
         t_bin0 = time.perf_counter()
         prog = self.program
         n = len(self.devices)
-        for d in self.devices:
-            d.packets_done = 0
-            d.busy_time = 0.0
-            d.finish_time = 0.0
-            d.dead = False
+        if self.reset_device_stats:
+            for d in self.devices:
+                d.packets_done = 0
+                d.busy_time = 0.0
+                d.finish_time = 0.0
+                d.dead = False
 
-        out_rows = prog.total_work * prog.out_rows_per_wg
-        output = np.zeros((out_rows, prog.out_cols), prog.out_dtype)
+        output = None
+        if self.collect is None:
+            out_rows = prog.total_work * prog.out_rows_per_wg
+            output = np.zeros((out_rows, prog.out_cols), prog.out_dtype)
         profiles = [DeviceProfile(d.name,
-                                  (powers[i] if powers else
+                                  (self.powers[i] if self.powers else
                                    (d.throughput or 1.0 / d.throttle)))
                     for i, d in enumerate(self.devices)]
         executed: List = []
+        errors: List[BaseException] = []
         exec_lock = threading.Lock()
         state: Dict[str, Any] = {"sched": None, "roi0": None, "inflight": 0}
         ready = threading.Barrier(n + 1)
         fns: List[Optional[Callable]] = [None] * n
+        t0_busy = [d.busy_time for d in self.devices]
 
         def device_thread(i: int):
             dev = self.devices[i]
-            if self.opt_init:
-                # parallel AOT compile, overlapped with Runtime's buffer prep
-                fns[i] = self._compile_for(dev)
+            if self.parallel_init:
+                # parallel AOT compile, overlapped with Runtime's prep
+                try:
+                    fns[i] = self.compile_fn(dev)
+                except Exception as e:      # compile failure = dead device
+                    dev.dead = True
+                    with exec_lock:
+                        errors.append(e)
             ready.wait()
             sched: SchedulerBase = state["sched"]
+            if sched is None:
+                return                        # scheduler construction failed
             fn = fns[i]
+            if fn is None:
+                sched.mark_dead(i)            # compile failed: release work
+                return
             while True:
                 with exec_lock:
                     pkt = sched.next_packet(i)
@@ -152,54 +280,102 @@ class Engine:
                 except DeviceFailure:
                     with exec_lock:
                         sched.requeue(pkt)
+                        sched.mark_dead(i)
                         state["inflight"] -= 1
                     break
-                if hasattr(sched, "observe"):
-                    sched.observe(i, wg_s)
-                r0 = pkt.offset * prog.out_rows_per_wg
-                r1 = (pkt.offset + pkt.size) * prog.out_rows_per_wg
-                res = np.asarray(res).reshape(r1 - r0, prog.out_cols)
-                if self.opt_buffers:
-                    output[r0:r1] = res           # in-place commit
-                else:
+                except Exception as e:
+                    # unexpected executor error: same fault-tolerance path as
+                    # a device failure, but the error is surfaced if the run
+                    # cannot complete without this device
+                    dev.dead = True
                     with exec_lock:
-                        executed.append(("copy", r0, r1, np.array(res, copy=True)))
-                with exec_lock:
-                    executed.append(("pkt", pkt))
-                    state["inflight"] -= 1
+                        errors.append(e)
+                        sched.requeue(pkt)
+                        sched.mark_dead(i)
+                        state["inflight"] -= 1
+                    break
+                try:
+                    if hasattr(sched, "observe"):
+                        sched.observe(i, wg_s)
+                    if self.collect is not None:
+                        with exec_lock:
+                            self.collect(pkt, res, dev)
+                            executed.append(("pkt", pkt))
+                            state["inflight"] -= 1
+                        continue
+                    r0 = pkt.offset * prog.out_rows_per_wg
+                    r1 = (pkt.offset + pkt.size) * prog.out_rows_per_wg
+                    res = np.asarray(res).reshape(r1 - r0, prog.out_cols)
+                    if self.registered_buffers:
+                        output[r0:r1] = res           # in-place commit
+                    else:
+                        with exec_lock:
+                            executed.append(("copy", r0, r1,
+                                             np.array(res, copy=True)))
+                    with exec_lock:
+                        executed.append(("pkt", pkt))
+                        state["inflight"] -= 1
+                except Exception as e:
+                    # commit-path failure (mis-shaped result, collect hook,
+                    # observe): must release the in-flight packet and mark
+                    # the device dead, or the surviving devices spin forever
+                    dev.dead = True
+                    with exec_lock:
+                        errors.append(e)
+                        sched.requeue(pkt)
+                        sched.mark_dead(i)
+                        state["inflight"] -= 1
+                    break
             dev.finish_time = time.perf_counter() - state["roi0"] \
                 if state["roi0"] else 0.0
 
-        threads = [threading.Thread(target=device_thread, args=(i,))
-                   for i in range(n)]
-        if self.opt_init:
-            for t in threads:
-                t.start()
+        def start_threads() -> List[threading.Event]:
+            return [self.pool.submit(_bind(device_thread, i))
+                    for i in range(n)]
+
+        if self.parallel_init:
+            done_events = start_threads()
             # Runtime prepares the scheduler concurrently with device compiles
-            state["sched"] = make_scheduler(self.scheduler_name,
-                                            prog.total_work, prog.lws,
-                                            profiles, **self.scheduler_kwargs)
+            try:
+                state["sched"] = make_scheduler(self.scheduler_name,
+                                                prog.total_work, prog.lws,
+                                                profiles,
+                                                **self.scheduler_kwargs)
+            except BaseException:
+                # release the pooled threads parked at the barrier (they see
+                # sched=None and exit) before surfacing the error — a raise
+                # here must not wedge n workers forever
+                ready.wait()
+                for ev in done_events:
+                    ev.wait()
+                raise
             state["roi0"] = time.perf_counter()
             ready.wait()
         else:
             # sequential: discovery+compile each device, then scheduler
             for i, d in enumerate(self.devices):
-                fns[i] = self._compile_for(d)
+                try:
+                    fns[i] = self.compile_fn(d)
+                except Exception as e:
+                    d.dead = True
+                    errors.append(e)
             state["sched"] = make_scheduler(self.scheduler_name,
                                             prog.total_work, prog.lws,
                                             profiles, **self.scheduler_kwargs)
             state["roi0"] = time.perf_counter()
-            for t in threads:
-                t.start()
+            done_events = start_threads()
             ready.wait()
-        for t in threads:
-            t.join()
+        for ev in done_events:
+            ev.wait()
         roi_time = time.perf_counter() - state["roi0"]
         if state["sched"].remaining() > 0:
-            raise RuntimeError(
+            err = RuntimeError(
                 f"{prog.name}: {state['sched'].remaining()} work-groups "
                 "unprocessed — all devices failed")
-        if not self.opt_buffers:
+            if errors:
+                raise err from errors[0]
+            raise err
+        if self.collect is None and not self.registered_buffers:
             # assemble results from per-packet copies (bulk copy at the end)
             for item in executed:
                 if item[0] == "copy":
@@ -209,7 +385,8 @@ class Engine:
         packets = [it[1] for it in executed if it[0] == "pkt"]
         result = RunResult(
             total_time=roi_time,
-            device_busy=[d.busy_time for d in self.devices],
+            device_busy=[d.busy_time - b0 for d, b0 in
+                         zip(self.devices, t0_busy)],
             device_finish=[d.finish_time for d in self.devices],
             packets=packets,
             binary_time=binary_time,
@@ -217,3 +394,75 @@ class Engine:
         )
         result.output = output  # type: ignore[attr-defined]
         return result
+
+
+def _bind(fn: Callable, i: int) -> Callable[[], None]:
+    """Bind the device index without a late-binding closure bug."""
+    def bound():
+        fn(i)
+    return bound
+
+
+class Engine:
+    """DEPRECATED one-PR compatibility shim over ``repro.api.EngineSession``.
+
+    ``Engine(program, devices, ...)`` owns a private single-program session;
+    ``run()`` is ``session.submit(program).result()``.  Migrate:
+
+        Engine(prog, devs, scheduler=s).run()         # old
+        coexec(prog, devs, scheduler=s)               # new Tier-1
+        EngineSession(devs, scheduler=s).run(prog)    # new Tier-2
+
+    See docs/api.md for the full migration guide.  This shim will be
+    removed next PR.
+    """
+
+    def __init__(self, program: Program, devices: Sequence[DeviceGroup], *,
+                 scheduler: str = "hguided_opt",
+                 scheduler_kwargs: Optional[Dict] = None,
+                 opt_init: bool = True, opt_buffers: bool = True,
+                 init_cost_s: float = 0.0):
+        warnings.warn(
+            "Engine is deprecated; use repro.api.coexec (Tier-1) or "
+            "repro.api.EngineSession (Tier-2).  See docs/api.md.",
+            DeprecationWarning, stacklevel=2)
+        from repro.api.policies import BufferPolicy
+        from repro.api.session import EngineSession
+        self.program = program.validate()
+        self._session = EngineSession(
+            devices, scheduler=scheduler, scheduler_kwargs=scheduler_kwargs,
+            buffer_policy=BufferPolicy.from_flag(opt_buffers),
+            parallel_init=opt_init, cache_executables=opt_init,
+            init_cost_s=init_cost_s)
+
+    # -- old surface, delegated -------------------------------------------
+    @property
+    def devices(self) -> List[DeviceGroup]:
+        return self._session.devices
+
+    @property
+    def _compiled(self) -> Dict:
+        """Old tests/tools poked the cache; expose the session's view keyed
+        by device name (this shim serves exactly one program)."""
+        return {dev: fn for (_, dev), fn
+                in self._session.executables.items()}
+
+    def add_device(self, dev: DeviceGroup) -> None:
+        self._session.add_device(dev)
+
+    def remove_device(self, name: str) -> None:
+        self._session.remove_device(name)
+
+    def run(self, *, powers: Optional[List[float]] = None) -> RunResult:
+        return self._session.submit(self.program, powers=powers).result()
+
+    def close(self) -> None:
+        self._session.close()
+
+    def __del__(self):
+        # the old Engine held no threads; don't let the shim leak a
+        # dispatcher + worker pool per instance in out-of-tree loops
+        try:
+            self._session.close()
+        except Exception:
+            pass

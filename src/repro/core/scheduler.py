@@ -30,10 +30,13 @@ All schedulers are thread-safe (the paper's "atomic queue") and support
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+import inspect
 import math
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -42,6 +45,10 @@ class Packet:
     size: int
     seq: int
     device: int
+    # fault-tolerance provenance: a requeued packet keeps its original seq
+    # and is re-issued with retried=True, so RunResult.packets never reports
+    # more sequence numbers than packets actually carved
+    retried: bool = False
 
 
 @dataclass
@@ -69,13 +76,20 @@ class SchedulerBase:
         with self._lock:
             if self._retry:
                 pkt = self._retry.pop()
-                return Packet(pkt.offset, pkt.size, self._bump(), device)
+                return dataclasses.replace(pkt, device=device, retried=True)
             return self._carve(device)
 
     def requeue(self, pkt: Packet) -> None:
         """Return an in-flight packet to the queue (device failure)."""
         with self._lock:
             self._retry.append(pkt)
+
+    def mark_dead(self, device: int) -> None:
+        """Notify that a device died.  Pool-carving schedulers need do
+        nothing (survivors drain the shared queue), but pre-assignment
+        schedulers (Static*) must release the dead device's unclaimed
+        chunk back to the queue — otherwise that work is stranded and the
+        run can never drain."""
 
     def remaining(self) -> int:
         with self._lock:
@@ -110,11 +124,18 @@ class SchedulerBase:
 
 class StaticScheduler(SchedulerBase):
     """One power-proportional packet per device. ``order`` gives the delivery
-    order of the chunks over the work range (paper: Static vs Static rev)."""
+    order of the chunks over the work range; ``reverse`` flips the default
+    order (paper: Static vs Static rev — ``static_rev`` is registered as this
+    class with ``reverse=True``, a plain config rather than a closure)."""
 
-    def __init__(self, total_work, lws, devices, order: Optional[List[int]] = None):
+    def __init__(self, total_work, lws, devices,
+                 order: Optional[List[int]] = None, reverse: bool = False):
         super().__init__(total_work, lws, devices)
-        self.order = list(order) if order is not None else list(range(len(devices)))
+        if order is None:
+            order = list(range(len(devices)))
+            if reverse:
+                order.reverse()
+        self.order = list(order)
         total_p = sum(d.power for d in self.devices)
         sizes = {}
         acc = 0
@@ -129,22 +150,38 @@ class StaticScheduler(SchedulerBase):
         self._sizes = sizes
         self._given: Dict[int, bool] = {}
 
-    def _carve(self, device: int) -> Optional[Packet]:
-        if self._given.get(device):
-            return None
+    def _chunk_bounds(self, device: int) -> Tuple[int, int]:
         # chunks are laid out in `order`: compute this device's offset
         off = 0
         for di in self.order:
             if di == device:
                 break
             off += self._sizes[di]
-        size = self._sizes[device]
+        return off, self._sizes[device]
+
+    def _carve(self, device: int) -> Optional[Packet]:
+        if self._given.get(device):
+            return None
+        off, size = self._chunk_bounds(device)
         if size <= 0 or off >= self.G:
             self._given[device] = True
             return None
         self._given[device] = True
         pkt = Packet(off, min(size, self.G - off), self._bump(), device)
         return pkt
+
+    def mark_dead(self, device: int) -> None:
+        # a dead device's unclaimed pre-assigned chunk is released to the
+        # retry queue so survivors can absorb it (it would strand otherwise:
+        # _carve only hands a chunk to its owner)
+        with self._lock:
+            if self._given.get(device):
+                return
+            self._given[device] = True
+            off, size = self._chunk_bounds(device)
+            size = min(size, self.G - off)
+            if size > 0 and off < self.G:
+                self._retry.append(Packet(off, size, self._bump(), device))
 
     def remaining(self) -> int:  # static: everything is pre-assigned
         with self._lock:
@@ -263,11 +300,14 @@ class HGuidedDeadlineScheduler(HGuidedOptScheduler):
     """
 
     def __init__(self, total_work, lws, devices, ewma: float = 0.5,
-                 slack_fraction: float = 0.5):
+                 slack_fraction: float = 0.5,
+                 slack_s: Optional[float] = None):
         super().__init__(total_work, lws, devices, ewma=ewma)
         assert 0.0 < slack_fraction <= 1.0
         self.slack_fraction = slack_fraction
         self._slack: Optional[float] = None
+        if slack_s is not None:     # construction-time slack (session submits
+            self.update_slack(slack_s)   # build one scheduler per round)
 
     def update_slack(self, slack_s: Optional[float]) -> None:
         """Set the tightest remaining slack (seconds); None lifts the cap."""
@@ -287,20 +327,97 @@ class HGuidedDeadlineScheduler(HGuidedOptScheduler):
         return min(size, cap)
 
 
-SCHEDULERS = {
-    "static": StaticScheduler,
-    "static_rev": lambda G, lws, devs, **kw: StaticScheduler(
-        G, lws, devs, order=list(reversed(range(len(devs)))), **kw),
-    "dynamic": DynamicScheduler,
-    "hguided": HGuidedScheduler,
-    "hguided_opt": HGuidedOptScheduler,
-    "hguided_deadline": HGuidedDeadlineScheduler,
-}
+# ---------------------------------------------------------------- registry
+@dataclass(frozen=True)
+class SchedulerSpec:
+    """Registry entry: the scheduler class plus its default constructor
+    kwargs (how ``static_rev`` stays a config instead of a closure)."""
+    cls: type
+    defaults: Mapping[str, object] = field(default_factory=dict)
+
+
+_REGISTRY: Dict[str, SchedulerSpec] = {}
+
+# Back-compat view: name -> zero-config constructor.  Kept in lockstep with
+# _REGISTRY by register/unregister; prefer make_scheduler()/the registry
+# helpers in new code.
+SCHEDULERS: Dict[str, Callable[..., "SchedulerBase"]] = {}
+
+
+def register_scheduler(name: str, cls: type, *,
+                       defaults: Optional[Mapping[str, object]] = None,
+                       overwrite: bool = False) -> type:
+    """Register a scheduler under ``name`` (the Tier-3 plugin hook).
+
+    ``cls`` must subclass SchedulerBase with the ``(total_work, lws,
+    devices, **kw)`` constructor contract; ``defaults`` are kwargs merged
+    under any caller-supplied ones.  Returns ``cls`` so it can be used as a
+    decorator: ``@register_scheduler("mine", defaults={...})`` is spelled
+    ``register_scheduler("mine", MyScheduler)``.
+    """
+    if not (isinstance(cls, type) and issubclass(cls, SchedulerBase)):
+        raise TypeError(f"scheduler {name!r} must be a SchedulerBase "
+                        f"subclass, got {cls!r}")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"scheduler {name!r} is already registered "
+                         "(pass overwrite=True to replace it)")
+    spec = SchedulerSpec(cls, dict(defaults or {}))
+    _REGISTRY[name] = spec
+    SCHEDULERS[name] = cls if not spec.defaults else \
+        functools.partial(cls, **spec.defaults)
+    return cls
+
+
+def unregister_scheduler(name: str) -> None:
+    _REGISTRY.pop(name, None)
+    SCHEDULERS.pop(name, None)
+
+
+def available_schedulers() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def scheduler_spec(name: str) -> SchedulerSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scheduler {name!r}; registered: "
+                       f"{available_schedulers()}") from None
+
+
+def scheduler_accepts(name: str, param: str) -> bool:
+    """True if ``name``'s constructor takes ``param`` (capability probe —
+    e.g. only deadline-aware schedulers accept ``slack_s``).
+
+    Walks the MRO so a plugin subclass with a ``**kwargs`` passthrough
+    constructor still advertises its base's parameters; an explicit
+    signature without ``param`` (and no ``**kwargs``) stops the walk."""
+    for klass in scheduler_spec(name).cls.__mro__:
+        init = klass.__dict__.get("__init__")
+        if init is None:
+            continue
+        params = inspect.signature(init).parameters
+        if param in params:
+            return True
+        if not any(p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in params.values()):
+            return False
+    return False
 
 
 def make_scheduler(name: str, total_work: int, lws: int,
                    devices: Sequence[DeviceProfile], **kw) -> SchedulerBase:
-    return SCHEDULERS[name](total_work, lws, devices, **kw)
+    spec = scheduler_spec(name)
+    merged = {**spec.defaults, **kw}
+    return spec.cls(total_work, lws, devices, **merged)
+
+
+register_scheduler("static", StaticScheduler)
+register_scheduler("static_rev", StaticScheduler, defaults={"reverse": True})
+register_scheduler("dynamic", DynamicScheduler)
+register_scheduler("hguided", HGuidedScheduler)
+register_scheduler("hguided_opt", HGuidedOptScheduler)
+register_scheduler("hguided_deadline", HGuidedDeadlineScheduler)
 
 
 def rotate_static_order(name: str, n_devices: int,

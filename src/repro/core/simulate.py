@@ -162,10 +162,12 @@ def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
             dt *= math.exp(rng.gauss(0.0, d.jitter))
         end = t + dt
         if d.fail_at is not None and end > d.fail_at >= t:
-            # device dies mid-packet: requeue, mark dead
+            # device dies mid-packet: requeue, mark dead (pre-assignment
+            # schedulers also release the device's unclaimed chunk)
             dead[i] = True
             finish[i] = d.fail_at
             sched.requeue(pkt)
+            sched.mark_dead(i)
             # wake an idle survivor (if any already drained the queue)
             for j in range(n):
                 if not dead[j]:

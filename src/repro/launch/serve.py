@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke
-from repro.core.scheduler import SCHEDULERS
+from repro.core.scheduler import available_schedulers
 from repro.serve import (ARRIVALS, CoexecServer, Replica, RequestQueue,
                          ServerConfig, make_requests, trace_arrivals)
 
@@ -33,7 +33,7 @@ def main(argv=None) -> int:
     ap.add_argument("--lws", type=int, default=4,
                     help="requests per packet alignment")
     ap.add_argument("--scheduler", default="hguided_deadline",
-                    choices=sorted(SCHEDULERS))
+                    choices=available_schedulers())
     ap.add_argument("--arrival", default="poisson",
                     choices=sorted(ARRIVALS) + ["trace"])
     ap.add_argument("--trace", default=None,
@@ -81,7 +81,10 @@ def main(argv=None) -> int:
         scheduler=args.scheduler, lws=args.lws, gen=args.gen,
         policy=args.policy, batch_window_s=args.batch_window,
         round_quantum_s=args.quantum))
-    out = server.run(RequestQueue(reqs))
+    try:
+        out = server.run(RequestQueue(reqs))
+    finally:
+        server.close()
     st = out.stats
     print(f"{len(reqs)} requests @ {args.rate:.0f}/s ({args.arrival}), "
           f"SLO {args.slo:.2f}s, scheduler={args.scheduler}")

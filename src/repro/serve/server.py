@@ -16,10 +16,11 @@ heterogeneous replicas.  Dataflow per *dispatch round*:
   with).  A request predicted to miss is *shed* (dropped now, so its
   work cannot drag every later request past its deadline too) or
   *degraded* (granted proportionally fewer decode tokens) per policy.
-* **Dispatch**: the admitted round becomes one scheduler instance —
-  any registered scheduler works; ``hguided_deadline`` additionally
-  receives the round's tightest slack so packets shrink as deadlines
-  close in.
+* **Dispatch**: the admitted round becomes one ``EngineSession`` submit —
+  one work-group per request, one Program whose range function serves
+  ``lws``-sized sub-batches on the packet's replica.  Any registered
+  scheduler works; ``hguided_deadline`` additionally receives the round's
+  tightest slack (``slack_s``) so packets shrink as deadlines close in.
 * **Feedback**: measured requests/s per replica updates both the live
   scheduler (within-round adaptation) and the server's EWMA powers
   (carried across rounds — the admission predictor and the next round's
@@ -34,8 +35,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.scheduler import (DeviceProfile, make_scheduler,
-                                  rotate_static_order)
+from repro.api.session import EngineSession
+from repro.core.device import DeviceGroup
+from repro.core.runtime import Program
+from repro.core.scheduler import rotate_static_order, scheduler_accepts
 from repro.serve.replica import Replica
 from repro.serve.stats import ServeStats, summarize
 from repro.serve.workload import Request, RequestQueue
@@ -54,6 +57,10 @@ class ServerConfig:
     batch_window_s: float = 0.0   # micro-batching: wait for round to fill
     round_quantum_s: float = float("inf")  # max EDF-first work per round
     warmup: bool = True           # pre-compile before starting the clock
+
+
+def _no_collect(pkt, res, dev) -> None:
+    """Round programs commit per-request state in their range function."""
 
 
 @dataclass
@@ -79,6 +86,14 @@ class CoexecServer:
         self._calibrated = initial_power is not None
         self._round = 0
         self._lock = threading.Lock()
+        # one dispatch group per replica.  Heterogeneity is emulated inside
+        # the round program (replica.group.throttle scales each sub-batch),
+        # so the dispatch groups themselves are unthrottled — the session
+        # must not throttle a second time.
+        self._by_name = {r.name: r for r in self.replicas}
+        self.session = EngineSession(
+            [DeviceGroup(r.name) for r in self.replicas],
+            scheduler=cfg.scheduler, name="coexec_server")
 
     # -- admission -----------------------------------------------------------
     def _admit(self, pending: List[Request], now: float,
@@ -137,32 +152,27 @@ class CoexecServer:
                    results: Dict[int, np.ndarray],
                    dispatch: Dict[str, int]) -> None:
         cfg = self.cfg
-        profiles = [DeviceProfile(r.name, self._power.get(r.name,
-                                                          1.0 / r.group.throttle))
-                    for r in self.replicas]
+        powers = [self._power.get(r.name, 1.0 / r.group.throttle)
+                  for r in self.replicas]
         skw = dict(cfg.scheduler_kwargs)
         order = rotate_static_order(cfg.scheduler, len(self.replicas),
                                     self._round)
         if order is not None:
             skw.setdefault("order", order)
+        if scheduler_accepts(cfg.scheduler, "slack_s"):
+            skw["slack_s"] = min(r.deadline for r in admitted) - now
         self._round += 1
-        sched = make_scheduler(cfg.scheduler, len(admitted), cfg.lws,
-                               profiles, **skw)
-        if hasattr(sched, "update_slack"):
-            sched.update_slack(min(r.deadline for r in admitted) - now)
 
-        def worker(i: int):
-            rep = self.replicas[i]
-            while True:
-                pkt = sched.next_packet(i)
-                if pkt is None:
-                    return
+        def build(group: DeviceGroup):
+            rep = self._by_name[group.name]
+
+            def fn(offset: int, size: int):
                 # execute in lws-sized sub-batches: fixed batch shapes keep
                 # XLA from recompiling per packet size, and give finer
                 # per-request completion times
-                for c0 in range(0, pkt.size, cfg.lws):
-                    sub = admitted[pkt.offset + c0:
-                                   pkt.offset + min(c0 + cfg.lws, pkt.size)]
+                for c0 in range(0, size, cfg.lws):
+                    sub = admitted[offset + c0:
+                                   offset + min(c0 + cfg.lws, size)]
                     gen_eff = min(r.gen_alloc for r in sub)
                     # pad to exactly lws rows and pin the cache length:
                     # one compiled (prefill, decode) pair serves every
@@ -179,8 +189,6 @@ class CoexecServer:
                         dt *= rep.group.throttle
                     fin = time.perf_counter() - t0
                     rps = len(sub) / max(dt, 1e-9)
-                    if hasattr(sched, "observe"):
-                        sched.observe(i, rps)
                     with self._lock:
                         for j, r in enumerate(sub):
                             r.finish = fin
@@ -192,13 +200,14 @@ class CoexecServer:
                         prev = self._power.get(rep.name)
                         self._power[rep.name] = rps if prev is None else (
                             cfg.ewma * rps + (1 - cfg.ewma) * prev)
+            return fn
 
-        threads = [threading.Thread(target=worker, args=(i,))
-                   for i in range(len(self.replicas))]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
+        # one work-group per admitted request; results are committed by the
+        # range function itself, so collect is a no-op sink
+        prog = Program(f"round{self._round}", len(admitted), cfg.lws, build)
+        self.session.submit(prog, powers=powers, scheduler=cfg.scheduler,
+                            scheduler_kwargs=skw, collect=_no_collect,
+                            cache=False).result()
         self._calibrated = True
 
     # -- main entry ----------------------------------------------------------
@@ -250,3 +259,8 @@ class CoexecServer:
         stats = summarize(completed, duration=time.perf_counter() - t0,
                           dispatch=dispatch)
         return ServeOutcome(stats=stats, requests=completed, results=results)
+
+    def close(self) -> None:
+        """Release the dispatch session (a server can serve many queues;
+        close when done)."""
+        self.session.close()

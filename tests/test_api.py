@@ -1,0 +1,359 @@
+"""The tiered co-execution API: Tier-1 coexec, Tier-2 EngineSession +
+RunHandles, Tier-3 extension points, and the deprecated Engine shim."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (BufferPolicy, CancelledError, DevicePolicy,
+                       EngineSession, Program, StaticDevicePolicy,
+                       available_schedulers, coexec, register_scheduler,
+                       scheduler_accepts, unregister_scheduler)
+from repro.core import programs as P
+from repro.core.device import DeviceGroup
+from repro.core.runtime import Engine
+from repro.core.scheduler import DynamicScheduler
+
+
+def devices3():
+    return [DeviceGroup("cpu", throttle=3.0),
+            DeviceGroup("igpu", throttle=1.5),
+            DeviceGroup("gpu", throttle=1.0)]
+
+
+BINOMIAL_KW = dict(n_options=2048)
+
+
+@pytest.fixture(scope="module")
+def binomial_ref():
+    return P.reference_output("binomial", **BINOMIAL_KW)
+
+
+# ------------------------------------------------------------------ Tier-1
+
+def test_coexec_single_call_exact(binomial_ref):
+    res = coexec(P.PROGRAMS["binomial"](**BINOMIAL_KW), devices3())
+    np.testing.assert_allclose(res.output, binomial_ref,
+                               rtol=1e-5, atol=1e-5)
+    assert res.total_time > 0
+    assert res.binary_time >= res.total_time
+
+
+def test_coexec_discovers_devices(binomial_ref):
+    # devices=None -> DevicePolicy discovery (one group per JAX device)
+    res = coexec(P.PROGRAMS["binomial"](**BINOMIAL_KW))
+    np.testing.assert_allclose(res.output, binomial_ref,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_coexec_per_packet_buffer_policy(binomial_ref):
+    res = coexec(P.PROGRAMS["binomial"](**BINOMIAL_KW), devices3(),
+                 buffer_policy=BufferPolicy.PER_PACKET)
+    np.testing.assert_allclose(res.output, binomial_ref,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- Tier-2: sessions
+
+def test_submit_bit_identical_to_blocking_engine_run():
+    """Acceptance: RunHandle results == blocking Engine.run(), bitwise."""
+    prog = P.PROGRAMS["binomial"](**BINOMIAL_KW)
+    with pytest.warns(DeprecationWarning, match="Engine is deprecated"):
+        eng = Engine(prog, devices3())
+    blocking = eng.run()
+    with EngineSession(devices3()) as session:
+        async_res = session.submit(prog).result()
+    assert np.array_equal(async_res.output, blocking.output)
+
+
+def test_session_pays_init_cost_once_across_submits():
+    """Acceptance: two consecutive submits of one program pay init_cost_s
+    at most once (per device), amortized by the executable cache."""
+    prog = P.PROGRAMS["binomial"](**BINOMIAL_KW)
+    with EngineSession(devices3(), init_cost_s=0.05) as session:
+        r1 = session.submit(prog).result()
+        r2 = session.submit(prog).result()
+        assert session.init_payments == 3          # once per device
+        assert set(session.executables) == {("binomial", d) for d in
+                                            ("cpu", "igpu", "gpu")}
+        assert all(v == 1 for v in session.buffer_registry.values())
+    # warm run must not pay the 3 x 50 ms init again
+    assert r2.binary_time < r1.binary_time
+    assert r2.binary_time < 0.15
+    assert np.array_equal(r1.output, r2.output)
+
+
+def test_session_multi_program_cache_keys(binomial_ref):
+    gauss_kw = dict(h=256, w=128)
+    gauss_ref = P.reference_output("gaussian", **gauss_kw)
+    with EngineSession(devices3()) as session:
+        rb = session.run(P.PROGRAMS["binomial"](**BINOMIAL_KW))
+        rg = session.run(P.PROGRAMS["gaussian"](**gauss_kw))
+        # one cache entry per (program, device): 2 programs x 3 devices
+        assert session.init_payments == 6
+        session.run(P.PROGRAMS["binomial"](**BINOMIAL_KW))
+        assert session.init_payments == 6          # still warm
+        keys = set(session.executables)
+    assert {k[0] for k in keys} == {"binomial", "gaussian"}
+    np.testing.assert_allclose(rb.output, binomial_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(rg.output, gauss_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_run_handles_overlap_and_done(binomial_ref):
+    with EngineSession(devices3()) as session:
+        prog = P.PROGRAMS["binomial"](**BINOMIAL_KW)
+        handles = [session.submit(prog) for _ in range(3)]
+        # submits are non-blocking; results arrive in order
+        for h in handles:
+            res = h.result(timeout=60)
+            assert h.done() and not h.cancelled()
+            np.testing.assert_allclose(res.output, binomial_ref,
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_run_handle_cancel_queued():
+    prog = P.PROGRAMS["binomial"](**BINOMIAL_KW)
+    with EngineSession(devices3(), init_cost_s=0.2) as session:
+        h1 = session.submit(prog)          # holds the dispatcher >= 0.2 s
+        h2 = session.submit(prog)
+        assert h2.cancel()                 # still queued behind h1
+        assert not h2.cancel()             # second cancel is a no-op
+        r1 = h1.result()
+        assert r1.total_time > 0
+        assert h2.cancelled() and h2.done()
+        with pytest.raises(CancelledError):
+            h2.result()
+    # cancelling a completed handle is a no-op
+    assert not h1.cancel()
+
+
+def test_session_elastic_membership(binomial_ref):
+    prog = P.PROGRAMS["binomial"](**BINOMIAL_KW)
+    with EngineSession(devices3()[:2]) as session:
+        session.run(prog)
+        session.add_device(DeviceGroup("late", throttle=1.0))
+        r2 = session.run(prog)
+        assert len(r2.device_busy) == 3
+        np.testing.assert_allclose(r2.output, binomial_ref,
+                                   rtol=1e-5, atol=1e-5)
+        session.remove_device("late")
+        assert ("binomial", "late") not in session.executables
+        r3 = session.run(prog)
+        assert len(r3.device_busy) == 2
+        np.testing.assert_allclose(r3.output, binomial_ref,
+                                   rtol=1e-5, atol=1e-5)
+        with pytest.raises(ValueError):
+            session.add_device(DeviceGroup("cpu"))   # duplicate name
+
+
+def test_session_closed_rejects_submits():
+    session = EngineSession(devices3())
+    session.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        session.submit(P.PROGRAMS["binomial"](**BINOMIAL_KW))
+    session.close()                                  # idempotent
+
+
+def test_session_run_error_surfaces_on_handle():
+    def build(dev):
+        def fn(offset, size):
+            raise RuntimeError("executor exploded")
+        return fn
+
+    bad = Program("bad_kernel", 16, 1, build)
+    with EngineSession(devices3()) as session:
+        handle = session.submit(bad)
+        with pytest.raises(RuntimeError, match="unprocessed"):
+            handle.result()
+        assert isinstance(handle.exception(), RuntimeError)
+
+
+def test_commit_path_error_absorbed_by_survivors(binomial_ref):
+    """A mis-shaped result must kill only the offending device (packet
+    requeued, device dead), never hang the run — and the session's thread
+    pool must stay serviceable afterwards."""
+    import numpy as _np
+
+    def build(dev):
+        def fn(offset, size):
+            if dev.name == "gpu":
+                return _np.zeros(3)          # wrong shape -> reshape raises
+            return _np.full((size, 1), float(offset), _np.float32)
+        return fn
+
+    prog = Program("badshape", 64, 1, build)
+    with EngineSession(devices3()) as session:
+        res = session.submit(prog).result(timeout=60)
+        assert res.aborted_devices == 1
+        assert sum(p.size for p in res.packets) == 64
+        # pool not poisoned: the next submit completes normally
+        res2 = session.run(P.PROGRAMS["binomial"](**BINOMIAL_KW))
+        np.testing.assert_allclose(res2.output, binomial_ref,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ephemeral_submits_do_not_grow_registries():
+    def build(dev):
+        def fn(offset, size):
+            return np.zeros((size, 1), np.float32)
+        return fn
+
+    with EngineSession(devices3()) as session:
+        for i in range(5):
+            session.submit(Program(f"ephemeral{i}", 8, 1, build),
+                           cache=False).result()
+        assert session.executables == {}
+        assert session.buffer_registry == {}
+        assert session.init_payments == 15   # built, never cached
+
+
+# --------------------------------------------- Program.build validation
+
+def test_program_build_required_clear_error():
+    unbuildable = Program("nobuild", 16, 1)
+    with pytest.raises(ValueError, match="'build' must be a callable"):
+        coexec(unbuildable, devices3())
+    with EngineSession(devices3()) as session:
+        with pytest.raises(ValueError, match="'build' must be a callable"):
+            session.submit(unbuildable)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="'build' must be a callable"):
+            Engine(unbuildable, devices3())
+    with pytest.raises(ValueError, match="total_work"):
+        Program("empty", 0, 1, lambda dev: (lambda o, s: None)).validate()
+
+
+# -------------------------------------------------- Tier-3: extensions
+
+class _EveryFour(DynamicScheduler):
+    """Toy plugin: fixed 4-packet dynamic split."""
+
+    def __init__(self, total_work, lws, devices, n_packets=4):
+        super().__init__(total_work, lws, devices, n_packets=n_packets)
+
+
+def test_register_scheduler_plugin(binomial_ref):
+    register_scheduler("every4", _EveryFour, defaults={"n_packets": 4})
+    try:
+        assert "every4" in available_schedulers()
+        res = coexec(P.PROGRAMS["binomial"](**BINOMIAL_KW), devices3(),
+                     scheduler="every4")
+        np.testing.assert_allclose(res.output, binomial_ref,
+                                   rtol=1e-5, atol=1e-5)
+    finally:
+        unregister_scheduler("every4")
+    assert "every4" not in available_schedulers()
+    with pytest.raises(KeyError, match="unknown scheduler"):
+        coexec(P.PROGRAMS["binomial"](**BINOMIAL_KW), devices3(),
+               scheduler="every4")
+
+
+def test_register_scheduler_guards():
+    with pytest.raises(ValueError, match="already registered"):
+        register_scheduler("static", DynamicScheduler)
+    with pytest.raises(TypeError):
+        register_scheduler("not_a_scheduler", dict)
+
+
+def test_scheduler_capability_probe():
+    assert scheduler_accepts("hguided_deadline", "slack_s")
+    assert not scheduler_accepts("static", "slack_s")
+    assert scheduler_accepts("static", "reverse")
+
+
+def test_scheduler_capability_probe_sees_through_kwargs():
+    from repro.core.scheduler import HGuidedDeadlineScheduler
+
+    class Passthrough(HGuidedDeadlineScheduler):
+        def __init__(self, total_work, lws, devices, **kw):
+            super().__init__(total_work, lws, devices, **kw)
+
+    register_scheduler("ddl_plugin", Passthrough)
+    try:
+        # slack_s lives on the base __init__; the **kw shim must not hide it
+        assert scheduler_accepts("ddl_plugin", "slack_s")
+        assert not scheduler_accepts("ddl_plugin", "n_packets")
+    finally:
+        unregister_scheduler("ddl_plugin")
+
+
+def test_bad_scheduler_kwargs_error_does_not_wedge_session(binomial_ref):
+    """make_scheduler raising mid-dispatch must release the barrier-parked
+    device threads and leave the session serviceable."""
+    prog = P.PROGRAMS["binomial"](**BINOMIAL_KW)
+    with EngineSession(devices3()) as session:
+        bad = session.submit(prog, scheduler="static",
+                             scheduler_kwargs={"n_packets": 8})
+        with pytest.raises(TypeError):
+            bad.result(timeout=60)
+        res = session.run(prog)        # pool threads were not wedged
+        np.testing.assert_allclose(res.output, binomial_ref,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_scheduler_override_drops_session_kwargs(binomial_ref):
+    # session-level kwargs are tuned for the session scheduler; a per-submit
+    # override must not inherit them
+    with EngineSession(devices3(), scheduler="dynamic",
+                       scheduler_kwargs={"n_packets": 16}) as session:
+        prog = P.PROGRAMS["binomial"](**BINOMIAL_KW)
+        res = session.submit(prog, scheduler="static").result(timeout=60)
+        np.testing.assert_allclose(res.output, binomial_ref,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_device_policy_hook(binomial_ref):
+    class ReversedFleet(DevicePolicy):
+        def discover(self):
+            return devices3()
+
+        def order(self, devices):
+            return sorted(devices, key=lambda d: d.name, reverse=True)
+
+    with EngineSession(device_policy=ReversedFleet()) as session:
+        assert [d.name for d in session.devices] == ["igpu", "gpu", "cpu"]
+        res = session.run(P.PROGRAMS["binomial"](**BINOMIAL_KW))
+    np.testing.assert_allclose(res.output, binomial_ref,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_static_device_policy_fixed_fleet():
+    policy = StaticDevicePolicy(devices3())
+    with EngineSession(device_policy=policy) as session:
+        assert [d.name for d in session.devices] == ["cpu", "igpu", "gpu"]
+
+
+# --------------------------------------------------- deprecated shim
+
+def test_engine_shim_warns_and_delegates(binomial_ref):
+    prog = P.PROGRAMS["binomial"](**BINOMIAL_KW)
+    with pytest.warns(DeprecationWarning, match="Engine is deprecated"):
+        eng = Engine(prog, devices3(), init_cost_s=0.02)
+    r1 = eng.run()
+    r2 = eng.run()
+    np.testing.assert_allclose(r1.output, binomial_ref,
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(r1.output, r2.output)
+    assert set(eng._compiled) == {"cpu", "igpu", "gpu"}   # old cache view
+    eng.add_device(DeviceGroup("late"))
+    assert len(eng.devices) == 4
+    eng.remove_device("late")
+    assert len(eng.devices) == 3
+
+
+# ------------------------------------------------ provenance through API
+
+def test_retried_packets_keep_seq_and_flag():
+    prog = P.PROGRAMS["gaussian"](h=1024, w=128)
+    devs = devices3()
+    devs[2].fail_after = 0          # gpu dies on its first packet
+    res = coexec(prog, devs, scheduler="static")
+    assert res.aborted_devices == 1
+    assert res.retries >= 1
+    seqs = [p.seq for p in res.packets]
+    # provenance: no fresh seq minted for requeues -> all seqs unique and
+    # within the carved range
+    assert len(seqs) == len(set(seqs))
+    assert any(p.retried for p in res.packets)
+    assert sum(p.size for p in res.packets) == prog.total_work

@@ -1,12 +1,13 @@
-"""Co-execution integration: the threaded Engine on real kernels and the
-discrete-event simulator (paper-system behaviour)."""
+"""Co-execution integration: the threaded dispatch engine (via the tiered
+API) on real kernels and the discrete-event simulator (paper-system
+behaviour)."""
 import numpy as np
 import pytest
 
+from repro.api import EngineSession, coexec
 from repro.core import metrics as M
 from repro.core import programs as P
 from repro.core.device import DeviceGroup
-from repro.core.runtime import Engine
 from repro.core.simulate import SimConfig, SimDevice, simulate, \
     single_device_time
 
@@ -22,8 +23,7 @@ def test_engine_output_exact(sched):
     kw = {"n_packets": 8} if sched == "dynamic" else {}
     prog = P.PROGRAMS["binomial"](n_options=4096)
     ref = P.reference_output("binomial", n_options=4096)
-    eng = Engine(prog, devices3(), scheduler=sched, scheduler_kwargs=kw)
-    res = eng.run()
+    res = coexec(prog, devices3(), scheduler=sched, scheduler_kwargs=kw)
     np.testing.assert_allclose(res.output, ref, rtol=1e-5, atol=1e-5)
     assert res.total_time > 0
     assert res.binary_time >= res.total_time
@@ -37,9 +37,9 @@ def test_engine_device_failure_absorbed():
     devs[2].fail_after = 0          # gpu dies on its first packet
     # static: the gpu's chunk is pre-assigned, so the failure (and its
     # requeue) is deterministic regardless of thread scheduling
-    eng = Engine(prog, devs, scheduler="static")
-    res = eng.run()
+    res = coexec(prog, devs, scheduler="static")
     assert res.aborted_devices == 1
+    assert res.retries >= 1
     np.testing.assert_allclose(res.output, ref, rtol=1e-5, atol=1e-5)
 
 
@@ -48,38 +48,37 @@ def test_engine_all_fail_raises():
     devs = devices3()
     for d in devs:
         d.fail_after = 0
-    eng = Engine(prog, devs, scheduler="dynamic",
-                 scheduler_kwargs={"n_packets": 8})
     with pytest.raises(RuntimeError):
-        eng.run()
+        coexec(prog, devs, scheduler="dynamic",
+               scheduler_kwargs={"n_packets": 8})
 
 
 def test_engine_elastic_membership():
     prog = P.PROGRAMS["binomial"](n_options=2048)
     ref = P.reference_output("binomial", n_options=2048)
-    eng = Engine(prog, devices3()[:2], scheduler="hguided_opt")
-    r1 = eng.run()
-    eng.add_device(DeviceGroup("late", throttle=1.0))
-    r2 = eng.run()
-    np.testing.assert_allclose(r2.output, ref, rtol=1e-5, atol=1e-5)
-    assert len(r2.device_busy) == 3
-    eng.remove_device("late")
-    r3 = eng.run()
-    assert len(r3.device_busy) == 2
-    np.testing.assert_allclose(r3.output, ref, rtol=1e-5, atol=1e-5)
+    with EngineSession(devices3()[:2]) as session:
+        session.run(prog)
+        session.add_device(DeviceGroup("late", throttle=1.0))
+        r2 = session.run(prog)
+        np.testing.assert_allclose(r2.output, ref, rtol=1e-5, atol=1e-5)
+        assert len(r2.device_busy) == 3
+        session.remove_device("late")
+        r3 = session.run(prog)
+        assert len(r3.device_busy) == 2
+        np.testing.assert_allclose(r3.output, ref, rtol=1e-5, atol=1e-5)
 
 
 def test_engine_executable_cache_reused():
     prog = P.PROGRAMS["binomial"](n_options=2048)
-    eng = Engine(prog, devices3(), scheduler="hguided_opt",
-                 init_cost_s=0.05)
-    eng.run()
-    t0 = __import__("time").perf_counter()
-    eng.run()
-    warm = __import__("time").perf_counter() - t0
-    # the 3 x 50 ms init costs must not be paid again
-    assert warm < 10.0
-    assert len(eng._compiled) == 3
+    with EngineSession(devices3(), init_cost_s=0.05) as session:
+        session.run(prog)
+        t0 = __import__("time").perf_counter()
+        session.run(prog)
+        warm = __import__("time").perf_counter() - t0
+        # the 3 x 50 ms init costs must not be paid again
+        assert warm < 10.0
+        assert session.init_payments == 3
+        assert len(session.executables) == 3
 
 
 # ----------------------------------------------------------- simulator

@@ -1,5 +1,6 @@
 """Scheduler unit + property tests (the paper's §II-B invariants)."""
 import math
+import random
 import threading
 
 import pytest
@@ -9,6 +10,9 @@ from repro.core.scheduler import (DeviceProfile, DynamicScheduler,
                                   HGuidedOptScheduler, HGuidedScheduler,
                                   StaticScheduler, make_scheduler,
                                   tuned_profiles)
+
+ALL_SCHEDULERS = ["static", "static_rev", "dynamic", "hguided",
+                  "hguided_opt", "hguided_deadline"]
 
 
 def drain(sched, n_dev):
@@ -138,6 +142,86 @@ def test_requeue_fault_tolerance():
     out = drain(sched, 2)
     allp = [q for ps in out.values() for q in ps]
     assert coverage_ok(allp, 100)
+
+
+def test_requeue_preserves_seq_and_sets_retried():
+    """Provenance: a requeued packet is re-issued with its ORIGINAL seq and
+    retried=True — RunResult.packets never reports more sequence numbers
+    than packets actually carved."""
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 1.0)]
+    sched = DynamicScheduler(100, 1, devs, n_packets=10)
+    p = sched.next_packet(0)
+    assert not p.retried
+    sched.requeue(p)
+    again = sched.next_packet(1)
+    assert (again.offset, again.size, again.seq) == (p.offset, p.size, p.seq)
+    assert again.retried
+    assert again.device == 1            # re-issued to the surviving device
+    # the next carve continues the seq stream without a gap
+    fresh = sched.next_packet(0)
+    assert fresh.seq == p.seq + 1 and not fresh.retried
+
+
+def _drain_with_faults(sched, n_dev, die_after, requeue_budget, seed):
+    """Round-robin drain with injected mid-run faults, mirroring the
+    engine's semantics: a death happens while HOLDING a pulled packet
+    (run_packet raises), which is then requeued; a transient requeue
+    returns the packet and the device keeps pulling.  Device 0 is
+    immortal so the work cannot strand.  Returns executed packets."""
+    rng = random.Random(seed)
+    executed = []
+    pulled = {i: 0 for i in range(n_dev)}
+    alive = set(range(n_dev))
+    budget = requeue_budget
+    while True:
+        # a device that sees None stays alive: a later death may requeue
+        # work it must absorb (the engine's drained/alive_others loop)
+        progress = False
+        for i in sorted(alive):
+            pkt = sched.next_packet(i)
+            if pkt is None:
+                continue
+            progress = True
+            pulled[i] += 1
+            if i != 0 and die_after[i] is not None \
+                    and pulled[i] > die_after[i]:
+                sched.requeue(pkt)          # device dies holding the packet
+                sched.mark_dead(i)          # releases pre-assigned work
+                alive.discard(i)
+                continue
+            if budget > 0 and not pkt.retried and rng.random() < 0.3:
+                budget -= 1                  # transient failure: retry later
+                sched.requeue(pkt)
+                continue
+            executed.append(pkt)
+        if not progress:
+            return executed
+
+
+@given(total=st.integers(1, 4000), lws=st.integers(1, 32),
+       powers=st.lists(st.floats(0.05, 10.0), min_size=2, max_size=6),
+       name=st.sampled_from(ALL_SCHEDULERS),
+       deaths=st.lists(st.integers(0, 6), min_size=6, max_size=6),
+       requeue_budget=st.integers(0, 3),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=120, deadline=None)
+def test_property_fault_tolerant_coverage(total, lws, powers, name, deaths,
+                                          requeue_budget, seed):
+    """Every scheduler covers [0, G) exactly once — no gaps, no overlaps —
+    under random mid-run requeues and device deaths (satellite invariant
+    behind the API's fault-tolerance guarantee)."""
+    devs = [DeviceProfile(f"d{i}", p) for i, p in enumerate(powers)]
+    sched = make_scheduler(name, total, lws, devs)
+    # die_after[i] >= 4 means immortal; device 0 always survives
+    die_after = [None] + [d if d < 4 else None
+                          for d in deaths[1:len(devs)]]
+    executed = _drain_with_faults(sched, len(devs), die_after,
+                                  requeue_budget, seed)
+    assert coverage_ok(executed, total)
+    # provenance: every committed packet has a unique seq
+    seqs = [p.seq for p in executed]
+    assert len(seqs) == len(set(seqs))
+    assert sched.remaining() == 0
 
 
 def test_tuned_profiles_paper_laws():

@@ -258,7 +258,11 @@ def test_server_replica_invariant_outputs(smoke_serving):
     def run(replicas):
         reqs = make_requests([0.0] * len(prompts), slo=300.0,
                              prompt_fn=lambda i: prompts[i])
-        out = CoexecServer(replicas, scfg).run(RequestQueue(reqs))
+        server = CoexecServer(replicas, scfg)
+        try:
+            out = server.run(RequestQueue(reqs))
+        finally:
+            server.close()
         assert out.stats.served == len(prompts)
         return out
 
@@ -281,7 +285,10 @@ def test_server_sheds_on_predicted_miss(smoke_serving):
         ServerConfig(scheduler="hguided_deadline", lws=2, gen=2,
                      policy="shed"),
         initial_power={"a": 1.0})        # calibrated: 1 req/s, SLO 1 ms
-    out = server.run(RequestQueue(reqs))
+    try:
+        out = server.run(RequestQueue(reqs))
+    finally:
+        server.close()
     assert out.stats.shed > 0
     assert out.stats.shed + out.stats.served == len(prompts)
     for r in out.requests:
@@ -299,7 +306,10 @@ def test_server_degrade_policy_reduces_generation(smoke_serving):
         ServerConfig(scheduler="hguided_deadline", lws=2, gen=4,
                      policy="degrade", min_gen=1),
         initial_power={"a": 2.0})        # too slow for 8 reqs x 4 tokens
-    out = server.run(RequestQueue(reqs))
+    try:
+        out = server.run(RequestQueue(reqs))
+    finally:
+        server.close()
     assert out.stats.shed == 0           # degrade never drops
     assert out.stats.degraded > 0
     degraded = [r for r in out.requests if r.degraded]

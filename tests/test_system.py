@@ -6,11 +6,11 @@ executable assertions."""
 import numpy as np
 import pytest
 
+from repro.api import coexec
 from repro.configs.paper_suite import BENCHES, SCHED_CONFIGS, sim_devices
 from repro.core import metrics as M
 from repro.core import programs as P
 from repro.core.device import DeviceGroup
-from repro.core.runtime import Engine
 from repro.core.simulate import SimConfig, simulate, single_device_time
 
 
@@ -72,9 +72,7 @@ def test_real_engine_end_to_end_exact():
     for name, kw in cases.items():
         ref = P.reference_output(name, **kw)
         prog = P.PROGRAMS[name](**kw)
-        eng = Engine(prog, [DeviceGroup("a", throttle=2.0),
-                            DeviceGroup("b", throttle=1.0)],
-                     scheduler="hguided_opt")
-        res = eng.run()
+        res = coexec(prog, [DeviceGroup("a", throttle=2.0),
+                            DeviceGroup("b", throttle=1.0)])
         np.testing.assert_allclose(res.output, ref, rtol=1e-5, atol=1e-5)
         assert M.balance(res) > 0     # both devices participated
