@@ -3,28 +3,40 @@
 Three tiers, increasing control:
 
   * **Tier-1** ``coexec(program, devices=...)`` — single call, paper-tuned
-    defaults (HGuidedOpt, parallel init, registered buffers).
+    defaults (HGuidedOpt, parallel init, registered buffers); accepts a
+    ``region=`` sub-NDRange.
   * **Tier-2** ``EngineSession`` — executable cache, buffer registry and
     elastic device membership shared across many programs;
     ``session.submit(program) -> RunHandle`` (``.result()``, ``.done()``,
-    ``.cancel()``) overlaps input prep with in-flight runs.
+    ``.cancel()``) overlaps input prep with in-flight runs;
+    ``register_workload`` + ``submit(..., region=..., mode=OffloadMode.
+    ROI)`` is the paper's ROI offloading, ``mode=OffloadMode.BINARY`` its
+    self-contained binary offloading.
   * **Tier-3** extension points — ``register_scheduler`` (plugin registry),
     ``DevicePolicy`` (discovery/ordering), ``BufferPolicy`` (Runtime
     buffer handling).
 
-See docs/api.md for the tier table and the ``Engine`` migration guide.
+Work geometry is first-class: ``Region``/``Dim`` describe 1-D and 2-D
+NDRanges with per-dimension offset/size/lws; every scheduler carves them
+(2-D as row panels) and every ``RunResult`` carries a per-phase
+``PhaseBreakdown`` (init / offload / roi / teardown).
+
+See docs/api.md for the tier table and the offload-modes guide.
 """
 from repro.api.handles import CancelledError, RunHandle
-from repro.api.policies import BufferPolicy, DevicePolicy, StaticDevicePolicy
+from repro.api.policies import (BufferPolicy, DevicePolicy, OffloadMode,
+                                StaticDevicePolicy)
 from repro.api.session import EngineSession
 from repro.api.tier1 import coexec
+from repro.core.metrics import PhaseBreakdown
+from repro.core.region import Dim, Region
 from repro.core.runtime import Program
 from repro.core.scheduler import (available_schedulers, register_scheduler,
                                   scheduler_accepts, unregister_scheduler)
 
 __all__ = [
-    "BufferPolicy", "CancelledError", "DevicePolicy", "EngineSession",
-    "Program", "RunHandle", "StaticDevicePolicy", "available_schedulers",
-    "coexec", "register_scheduler", "scheduler_accepts",
-    "unregister_scheduler",
+    "BufferPolicy", "CancelledError", "DevicePolicy", "Dim", "EngineSession",
+    "OffloadMode", "PhaseBreakdown", "Program", "Region", "RunHandle",
+    "StaticDevicePolicy", "available_schedulers", "coexec",
+    "register_scheduler", "scheduler_accepts", "unregister_scheduler",
 ]

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import threading
 from concurrent.futures import CancelledError
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 __all__ = ["CancelledError", "RunHandle"]
 
@@ -22,7 +22,8 @@ _CANCELLED = "cancelled"
 class RunHandle:
     """Handle for one submitted program; created only by EngineSession."""
 
-    def __init__(self, program_name: str, seq: int):
+    def __init__(self, program_name: str, seq: int,
+                 discard: Optional[Callable[[], None]] = None):
         self.program_name = program_name
         self.seq = seq                       # session-wide submit index
         self._lock = threading.Lock()
@@ -30,6 +31,7 @@ class RunHandle:
         self._state = _PENDING
         self._result: Any = None
         self._exception: Optional[BaseException] = None
+        self._discard = discard              # session queue-removal hook
 
     # -- caller side --------------------------------------------------------
     def done(self) -> bool:
@@ -45,12 +47,18 @@ class RunHandle:
     def cancel(self) -> bool:
         """Cancel if still queued.  Returns False once dispatch started —
         in-flight co-execution is not interrupted (packets already carved
-        must commit exactly once)."""
+        must commit exactly once).  A successful cancel removes the
+        submission from the session queue immediately: ``done()`` flips
+        right away and the dispatcher never sees (nor pays init for) it."""
         with self._lock:
             if self._state != _PENDING:
                 return False
             self._state = _CANCELLED
         self._event.set()
+        if self._discard is not None:
+            # outside self._lock: the hook takes the session queue lock and
+            # the dispatcher takes these locks in the opposite order
+            self._discard()
         return True
 
     def result(self, timeout: Optional[float] = None):

@@ -1,4 +1,5 @@
-"""Tier-3 extension points: buffer and device policies.
+"""Tier-3 extension points and submit policies: offload mode, buffer and
+device policies.
 
 Schedulers have their own Tier-3 hook — ``repro.core.scheduler.
 register_scheduler`` — so all three of the paper's architectural roles
@@ -11,6 +12,30 @@ import enum
 from typing import List, Sequence
 
 from repro.core.device import DeviceGroup
+
+
+class OffloadMode(enum.Enum):
+    """How a submit pays the paper's management overheads.
+
+    * ``BINARY`` — the paper's binary offloading: the submit is fully
+      self-contained, init -> offload -> teardown.  Executables are built
+      fresh (never taken from the session cache) and any cached state under
+      the program's name is evicted afterwards; the phase breakdown charges
+      the full init and teardown to THIS run.  This is the per-run cost a
+      one-shot offload actually pays.
+    * ``ROI`` — the paper's region-of-interest offloading: the program
+      must first be registered as a persistent workload
+      (``EngineSession.register_workload``), which pays init once; each
+      ROI submit then executes a sub-region (``region=``) against the
+      registered executables and buffers, so back-to-back submits pay only
+      the ROI window.  This is where the paper's optimizations yield
+      17.4% instead of 7.5%.
+
+    ``None`` (the default at ``submit``) keeps the session's legacy
+    semantics: executables cached per session policy, no forced teardown.
+    """
+    BINARY = "binary"
+    ROI = "roi"
 
 
 class BufferPolicy(enum.Enum):

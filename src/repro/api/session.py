@@ -18,6 +18,12 @@ where that reuse lives:
     exactly as the init optimization overlaps compiles.  Submitted programs
     dispatch strictly in order (one co-execution owns the fleet at a time —
     the paper's co-execution model), but never block the submitting thread.
+  * a **workload registry** for the paper's ROI offloading:
+    ``register_workload(program)`` pays init once (executables built,
+    buffers registered on every device); subsequent
+    ``submit(program, region=..., mode=OffloadMode.ROI)`` calls execute
+    sub-regions warm.  ``mode=OffloadMode.BINARY`` is the opposite
+    contract: fully self-contained init -> offload -> teardown per submit.
 
 Blocking callers use ``session.run(program)`` or Tier-1
 ``coexec(program, devices=...)``.
@@ -25,6 +31,7 @@ Blocking callers use ``session.run(program)`` or Tier-1
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
 import time
 from dataclasses import dataclass, field
@@ -32,13 +39,14 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.device import DeviceGroup
 from repro.core.metrics import RunResult
+from repro.core.region import Region
 from repro.core.runtime import Program, WorkerPool, _RunContext
 from repro.core.scheduler import scheduler_spec
 from repro.api.handles import RunHandle
-from repro.api.policies import BufferPolicy, DevicePolicy
+from repro.api.policies import BufferPolicy, DevicePolicy, OffloadMode
 
 
-@dataclass
+@dataclass(eq=False)          # identity semantics: queue removal on cancel
 class _Submission:
     """Everything one queued run needs, captured at submit time."""
     program: Program
@@ -47,6 +55,8 @@ class _Submission:
     scheduler_kwargs: Dict
     cache: bool
     collect: Optional[Callable]
+    region: Optional[Region] = None
+    mode: Optional[OffloadMode] = None
     handle: RunHandle = field(default=None)  # type: ignore[assignment]
 
 
@@ -80,6 +90,7 @@ class EngineSession:
 
         self._executables: Dict[Tuple[str, str], Callable] = {}
         self._buffer_registry: Dict[Tuple[str, str], int] = {}
+        self._workloads: Dict[str, Program] = {}   # ROI-registered programs
         self.init_payments = 0               # executable builds performed
         self._lock = threading.Lock()
 
@@ -136,6 +147,58 @@ class EngineSession:
                         if k[0] == program_name]:
                 del self._buffer_registry[key]
 
+    # -- workload registry (ROI offloading) ----------------------------------
+    @property
+    def workloads(self) -> Dict[str, Program]:
+        """name -> registered persistent workload (ROI-mode targets)."""
+        with self._lock:
+            return dict(self._workloads)
+
+    def register_workload(self, program: Program, *,
+                          build: bool = True) -> Program:
+        """Register ``program`` as a persistent workload and pay init NOW.
+
+        Executables are built (and buffers registered) on every current
+        device up front, so subsequent ``mode=OffloadMode.ROI`` submits —
+        the paper's repeated sub-region offloads — run warm from the first
+        one.  ``build=False`` only records the workload (init is then paid
+        lazily by the first submit).  Returns the registered program.
+        """
+        program.validate()
+        with self._cv:
+            if self._closing:
+                raise RuntimeError(f"session {self.name!r} is closed")
+        with self._lock:
+            devices = list(self._devices)
+        if build:
+            # parallel init, same as the dispatch path: registration costs
+            # one init window, not n_devices serial ones
+            errors: List[BaseException] = []
+
+            def compile_one(dev):
+                try:
+                    self._compile_for(program, dev, cache=True)
+                except BaseException as e:
+                    errors.append(e)
+
+            threads = [threading.Thread(target=compile_one, args=(d,),
+                                        daemon=True) for d in devices]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            if errors:
+                raise errors[0]
+        with self._lock:
+            self._workloads[program.name] = program
+        return program
+
+    def unregister_workload(self, name: str) -> None:
+        """Drop a registered workload and evict its cached state."""
+        with self._lock:
+            self._workloads.pop(name, None)
+        self.evict(name)
+
     def _compile_for(self, program: Program, dev: DeviceGroup,
                      cache: bool) -> Callable:
         key = (program.name, dev.name)
@@ -164,7 +227,9 @@ class EngineSession:
                scheduler: Optional[str] = None,
                scheduler_kwargs: Optional[Dict] = None,
                collect: Optional[Callable] = None,
-               cache: bool = True) -> RunHandle:
+               cache: bool = True,
+               region: Optional[Region] = None,
+               mode: Optional[OffloadMode] = None) -> RunHandle:
         """Enqueue a program; returns a future-like RunHandle immediately.
 
         ``powers`` overrides the per-device computing powers for this run;
@@ -175,10 +240,62 @@ class EngineSession:
         replaces array output assembly for reduction-style programs
         (called under the run's commit lock); ``cache=False`` skips the
         executable cache for ephemeral programs.
+
+        ``region`` restricts the run to a sub-region of the program's
+        NDRange (must be contained and per-dimension lws-aligned within
+        it); the result's ``output`` covers just that sub-region.
+        ``mode`` selects the paper's offload contract: ``BINARY`` builds
+        fresh and tears down after (self-contained one-shot, full init +
+        teardown charged to this run's phase breakdown), ``ROI`` requires
+        the program to be ``register_workload``-ed and executes warm
+        against the registered executables/buffers.
         """
         program.validate()
         if scheduler is not None:
             scheduler_spec(scheduler)        # fail fast, not in dispatcher
+        if mode is OffloadMode.ROI:
+            with self._lock:
+                registered = self._workloads.get(program.name)
+            if registered is None:
+                raise RuntimeError(
+                    f"ROI submit of {program.name!r}: not a registered "
+                    "workload — call session.register_workload(program) "
+                    "first (ROI offloading reuses its executables and "
+                    "buffers)")
+            if registered is not program:
+                # names key the caches: silently running the registered
+                # instance's buffers for a different program object would
+                # return the wrong data with no error
+                raise ValueError(
+                    f"ROI submit of {program.name!r}: a different program "
+                    "instance is registered under this name; submit the "
+                    "instance register_workload returned, or "
+                    "unregister_workload first")
+            cache = True
+        elif mode is OffloadMode.BINARY:
+            with self._lock:
+                registered_name = program.name in self._workloads
+            if registered_name:
+                raise ValueError(
+                    f"BINARY submit of {program.name!r}: it is a "
+                    "registered workload, and BINARY teardown would "
+                    "silently de-warm its ROI submits — "
+                    "unregister_workload first")
+            cache = False                    # init is paid by THIS run
+        if region is not None:
+            full = program.work_region
+            if region.ndim != full.ndim:
+                raise ValueError(
+                    f"{program.name}: region {region} has {region.ndim} "
+                    f"dims, program NDRange {full} has {full.ndim}")
+            if not full.contains(region):
+                raise ValueError(f"{program.name}: region {region} not "
+                                 f"contained in program NDRange {full}")
+            if not region.aligned_within(full):
+                raise ValueError(
+                    f"{program.name}: region {region} is not lws-aligned "
+                    f"within {full} (per-dimension lws "
+                    f"{tuple(d.lws for d in full.dims)})")
         if scheduler_kwargs is not None:
             skw = dict(scheduler_kwargs)
         elif scheduler is None or scheduler == self.scheduler:
@@ -189,15 +306,26 @@ class EngineSession:
             program=program, powers=powers,
             scheduler=scheduler or self.scheduler,
             scheduler_kwargs=skw,
-            cache=cache, collect=collect)
+            cache=cache, collect=collect,
+            region=region, mode=mode)
         with self._cv:
             if self._closing:
                 raise RuntimeError(f"session {self.name!r} is closed")
-            sub.handle = RunHandle(program.name, self._seq)
+            sub.handle = RunHandle(program.name, self._seq,
+                                   discard=lambda: self._discard(sub))
             self._seq += 1
             self._queue.append(sub)
             self._cv.notify()
         return sub.handle
+
+    def _discard(self, sub: _Submission) -> None:
+        """Remove a cancelled submission from the queue (it must not wait
+        for — nor pay — dispatch)."""
+        with self._cv:
+            try:
+                self._queue.remove(sub)
+            except ValueError:
+                pass                          # already popped by dispatch
 
     def run(self, program: Program, **kw) -> RunResult:
         """Blocking convenience: ``submit(...).result()``."""
@@ -241,8 +369,22 @@ class EngineSession:
             parallel_init=self.parallel_init,
             reset_device_stats=self.reset_device_stats,
             powers=sub.powers,
-            collect=sub.collect)
-        return ctx.execute()
+            collect=sub.collect,
+            region=sub.region)
+        result = ctx.execute()
+        if sub.mode is OffloadMode.BINARY:
+            # the binary contract tears down per submit: evict anything
+            # cached under this name (stale earlier registrations included)
+            # and charge the eviction to this run's teardown phase
+            t0 = time.perf_counter()
+            self.evict(sub.program.name)
+            extra = time.perf_counter() - t0
+            if result.phases is not None:
+                result.phases = dataclasses.replace(
+                    result.phases,
+                    teardown_s=result.phases.teardown_s + extra)
+                result.binary_time = result.phases.binary
+        return result
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:

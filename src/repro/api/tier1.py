@@ -11,6 +11,7 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core.device import DeviceGroup
 from repro.core.metrics import RunResult
+from repro.core.region import Region
 from repro.core.runtime import Program
 from repro.api.policies import BufferPolicy, DevicePolicy
 from repro.api.session import EngineSession
@@ -24,12 +25,16 @@ def coexec(program: Program,
            buffer_policy: BufferPolicy = BufferPolicy.REGISTERED,
            device_policy: Optional[DevicePolicy] = None,
            parallel_init: bool = True,
-           init_cost_s: float = 0.0) -> RunResult:
+           init_cost_s: float = 0.0,
+           region: Optional[Region] = None) -> RunResult:
     """Co-execute ``program`` across ``devices`` and return its RunResult.
 
     ``devices=None`` discovers the fleet via ``device_policy`` (default:
     one group per visible JAX device).  The result's ``output`` attribute
     holds the assembled array, bit-identical to a single-device run.
+    ``region`` restricts the one-shot run to a sub-NDRange of the program
+    (lws-aligned per dimension); for *repeated* ROI offloads hold an
+    ``EngineSession`` and use ``register_workload`` + ROI-mode submits.
     """
     with EngineSession(devices,
                        scheduler=scheduler,
@@ -39,4 +44,5 @@ def coexec(program: Program,
                        parallel_init=parallel_init,
                        init_cost_s=init_cost_s,
                        name=f"coexec[{program.name}]") as session:
-        return session.submit(program, powers=powers).result()
+        return session.submit(program, powers=powers,
+                              region=region).result()

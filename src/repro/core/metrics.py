@@ -15,6 +15,39 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 
+@dataclass(frozen=True)
+class PhaseBreakdown:
+    """Per-phase wall-clock of one run (the paper's two timing modes made
+    measurable instead of inferred):
+
+    * ``init_s``      — setup: executable builds (or cache hits) overlapped
+                        with scheduler preparation, buffer registration.
+    * ``roi_s``       — the ROI window: packet dispatch + compute, first
+                        carve to queue drained (== ``RunResult.total_time``).
+    * ``offload_s``   — the offload window: ``roi_s`` plus result
+                        assembly/commit (the data path back to the host).
+    * ``teardown_s``  — releasing per-run state; for BINARY-mode submits
+                        also the cache/buffer eviction.
+
+    ``binary = init_s + offload_s + teardown_s`` is the paper's binary-mode
+    response time; ``roi_s`` alone is its ROI-mode response time.
+    """
+    init_s: float = 0.0
+    offload_s: float = 0.0
+    roi_s: float = 0.0
+    teardown_s: float = 0.0
+
+    @property
+    def binary(self) -> float:
+        return self.init_s + self.offload_s + self.teardown_s
+
+    @property
+    def management(self) -> float:
+        """Everything that is not the ROI window (the paper's 'management
+        overheads')."""
+        return self.binary - self.roi_s
+
+
 @dataclass
 class RunResult:
     """Timing record of one co-execution run."""
@@ -25,6 +58,7 @@ class RunResult:
     binary_time: Optional[float] = None  # incl. init/teardown ("binary" mode)
     aborted_devices: int = 0
     retries: int = 0                    # packets re-issued after a requeue
+    phases: Optional[PhaseBreakdown] = None  # per-phase wall-clock
 
     def __post_init__(self):
         if not self.retries:

@@ -1,16 +1,28 @@
-"""Program adapters: wrap the kernel suite's ``run_range`` entry points as
-co-execution Programs for the threaded Engine (real execution on JAX
-devices).  Sizes are scaled down from the paper's (which target a ~2 s GTX
-950 run) so the real-execution benches stay fast on one CPU; the simulator
+"""Program adapters: wrap the kernel suite's range entry points as
+co-execution Programs (real execution on JAX devices).
+
+Two geometries per the Region redesign:
+
+* the classic 1-D adapters (``run_range``) — a flat work-group line, one
+  work-group = ``LWS`` rows/options/bodies;
+* 2-D NDRange adapters (``*_program_2d``, image kernels only) — the
+  Program's region is ``rows x cols`` with per-dimension lws, the build
+  produces a ``fn(row0, n_rows, col0, n_cols)`` tile kernel, and
+  schedulers carve row panels.  These are the ROI-offloading targets
+  (register once, re-submit sub-regions warm).
+
+Sizes are scaled down from the paper's (which target a ~2 s GTX 950 run)
+so the real-execution benches stay fast on one CPU; the simulator
 (configs/paper_suite.py) carries the full calibrated sizes."""
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.region import Region
 from repro.core.runtime import Program
 from repro.kernels.binomial import ops as binomial_ops
 from repro.kernels.gaussian import ops as gaussian_ops
@@ -38,6 +50,56 @@ def gaussian_program(h: int = 1024, w: int = 512, seed: int = 0,
 
     return Program("gaussian", G, 1, build,
                    out_rows_per_wg=gaussian_ops.LWS, out_cols=w)
+
+
+def gaussian_program_2d(h: int = 512, w: int = 512, seed: int = 0,
+                        lws: Tuple[int, int] = (32, 32)) -> Program:
+    """Gaussian blur as a 2-D NDRange (rows x cols, row-panel carving)."""
+    rng = np.random.default_rng(seed)
+    img = rng.standard_normal((h, w)).astype(np.float32)
+    ip, wts = gaussian_ops.prepare(img)
+
+    def build(dev):
+        ipd = dev.put(jnp.asarray(ip))
+        wd = dev.put(jnp.asarray(wts))
+
+        def fn(row0, n_rows, col0, n_cols):
+            return gaussian_ops.run_region(ipd, wd, row0, n_rows,
+                                           col0, n_cols)
+        return fn
+
+    return Program("gaussian2d", build=build,
+                   region=Region.rect(h, w, lws=lws))
+
+
+def mandelbrot_program_2d(px: int = 256, max_iter: int = 256,
+                          lws: Tuple[int, int] = (8, 8)) -> Program:
+    def build(dev):
+        def fn(row0, n_rows, col0, n_cols):
+            return mandelbrot_ops.run_region(row0, n_rows, col0, n_cols,
+                                             width=px, height=px,
+                                             max_iter=max_iter)
+        return fn
+
+    return Program("mandelbrot2d", build=build,
+                   region=Region.rect(px, px, lws=lws),
+                   out_dtype=np.int32)
+
+
+def ray_program_2d(which: int = 1, px: int = 256,
+                   lws: Tuple[int, int] = (4, 4)) -> Program:
+    scene = ray_ref.make_scene(which)
+
+    def build(dev):
+        sc = {k: dev.put(v) for k, v in scene.items()}
+
+        def fn(row0, n_rows, col0, n_cols):
+            return ray_ops.run_region(sc, row0, n_rows, col0, n_cols,
+                                      width=px, height=px)
+        return fn
+
+    return Program(f"ray{which}_2d", build=build,
+                   region=Region.rect(px, px, lws=lws), out_cols=3)
 
 
 def binomial_program(n_options: int = 65536, seed: int = 0,
@@ -114,18 +176,29 @@ PROGRAMS = {
     "nbody": nbody_program,
     "ray1": lambda **kw: ray_program(1, **kw),
     "ray2": lambda **kw: ray_program(2, **kw),
+    # 2-D NDRange variants (ROI-offloading targets, row-panel carving)
+    "gaussian2d": gaussian_program_2d,
+    "mandelbrot2d": mandelbrot_program_2d,
+    "ray1_2d": lambda **kw: ray_program_2d(1, **kw),
+    "ray2_2d": lambda **kw: ray_program_2d(2, **kw),
 }
+
+
+class _HostDev:
+    def put(self, x):
+        return x
 
 
 def reference_output(program_name: str, **kwargs) -> np.ndarray:
     """Single-device single-packet execution (the correctness oracle for
-    co-executed outputs)."""
+    co-executed outputs).  2-D programs return (rows, cols*out_cols)."""
     prog = PROGRAMS[program_name](**kwargs)
-
-    class _Dev:
-        def put(self, x):
-            return x
-
-    fn = prog.build(_Dev())
+    fn = prog.build(_HostDev())
+    region = prog.work_region
+    if region.ndim == 2:
+        d0, d1 = region.dims
+        out = np.asarray(fn(d0.offset, d0.size, d1.offset, d1.size))
+        return out.reshape(d0.size * prog.out_rows_per_wg,
+                           d1.size * prog.out_cols)
     out = np.asarray(fn(0, prog.total_work))
     return out.reshape(prog.total_work * prog.out_rows_per_wg, prog.out_cols)

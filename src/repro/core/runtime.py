@@ -34,47 +34,108 @@ The paper's two runtime optimizations remain real, independent code paths:
     from per-packet copies at the end.
 
 Timing modes per the paper: ``binary`` (init -> teardown) and ``roi``
-(transfer + compute only).
+(transfer + compute only) — both are measured per run as a
+:class:`repro.core.metrics.PhaseBreakdown` stamped by the run's
+:class:`PhaseClock` (one timing implementation for all phases).
+
+Work geometry: a Program's work is a :class:`repro.core.region.Region`
+(1-D or 2-D NDRange).  1-D range kernels keep the classic
+``fn(offset, size)`` contract; 2-D programs build
+``fn(row0, n_rows, col0, n_cols)`` tile kernels, and schedulers carve
+their regions as row panels.  A run may cover a *sub-region* of the
+program (the paper's ROI offloading) — the session validates containment
+and per-dimension lws alignment before dispatch.
 
 Fault tolerance: a device thread that raises (or whose DeviceGroup is
 marked dead) has its in-flight packet requeued with provenance preserved
 (same ``seq``, ``retried=True``); remaining devices absorb the work.
-
-``Engine`` remains as a deprecated one-PR compatibility shim over
-``EngineSession`` for out-of-tree users.
 """
 from __future__ import annotations
 
 import threading
 import time
-import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.device import DeviceFailure, DeviceGroup
-from repro.core.metrics import RunResult
+from repro.core.metrics import PhaseBreakdown, RunResult
+from repro.core.region import Region
 from repro.core.scheduler import DeviceProfile, SchedulerBase, make_scheduler
+
+
+class PhaseClock:
+    """Named wall-clock marks for one run's phase accounting.
+
+    The runtime's single timing implementation: every phase boundary is a
+    ``mark``; durations are read back with ``between``/``since``.  Unset
+    marks read as 0.0 so partial runs (e.g. scheduler construction
+    failures) never crash the accounting path.
+    """
+
+    def __init__(self):
+        self._t: Dict[str, float] = {}
+
+    def mark(self, name: str) -> float:
+        t = time.perf_counter()
+        self._t[name] = t
+        return t
+
+    def at(self, name: str) -> Optional[float]:
+        return self._t.get(name)
+
+    def since(self, name: str) -> float:
+        t = self._t.get(name)
+        return 0.0 if t is None else time.perf_counter() - t
+
+    def between(self, a: str, b: str) -> float:
+        ta, tb = self._t.get(a), self._t.get(b)
+        if ta is None or tb is None:
+            return 0.0
+        return max(0.0, tb - ta)
 
 
 @dataclass
 class Program:
     """A single massively data-parallel task (the paper's redefined
-    'program'): inputs, an output pattern, and a range kernel."""
+    'program'): inputs, an output pattern, and a range kernel over a
+    1-D or 2-D work Region."""
     name: str
-    total_work: int                       # in work-groups
-    lws: int                              # work-group size (alignment unit)
-    # build(device_group) -> fn(offset, size) -> np.ndarray (the range result)
-    build: Optional[Callable[[DeviceGroup], Callable[[int, int], Any]]] = None
-    # output row-width: result rows per work-group (paper's "out pattern")
+    total_work: int = 0                   # dim-0 work-groups (mirrors region)
+    lws: int = 1                          # dim-0 alignment unit (mirrors)
+    # build(device_group) -> range executable:
+    #   1-D: fn(offset, size)                   -> np.ndarray
+    #   2-D: fn(row0, n_rows, col0, n_cols)     -> np.ndarray tile
+    build: Optional[Callable[[DeviceGroup], Callable[..., Any]]] = None
+    # output row-width: result rows per dim-0 work-group (paper's "out
+    # pattern"); for 2-D programs out_cols is per dim-1 work-item
     out_rows_per_wg: int = 1
     out_cols: int = 1
     out_dtype: Any = np.float32
+    region: Optional[Region] = None       # full NDRange (None = legacy 1-D)
+
+    def __post_init__(self):
+        if self.region is not None:
+            # keep the legacy flat fields in lockstep with dim 0 so every
+            # total_work/lws consumer sees the carved axis
+            self.total_work = self.region.dims[0].size
+            self.lws = self.region.dims[0].lws
+
+    @property
+    def work_region(self) -> Region:
+        """The program's full NDRange (legacy programs: 1-D at offset 0)."""
+        if self.region is not None:
+            return self.region
+        return Region.line(self.total_work, lws=self.lws)
+
+    @property
+    def ndim(self) -> int:
+        return 1 if self.region is None else self.region.ndim
 
     def validate(self) -> "Program":
         """Raise a clear ValueError now instead of a TypeError deep inside a
-        device thread.  Called at session submit / engine construction."""
+        device thread.  Called at session submit / workload registration."""
         if self.build is None or not callable(self.build):
             raise ValueError(
                 f"Program {self.name!r}: 'build' must be a callable "
@@ -198,7 +259,8 @@ class _RunContext:
                  parallel_init: bool = True,
                  reset_device_stats: bool = True,
                  powers: Optional[List[float]] = None,
-                 collect: Optional[Callable] = None):
+                 collect: Optional[Callable] = None,
+                 region: Optional[Region] = None):
         self.program = program
         self.devices = list(devices)
         if not self.devices:
@@ -212,10 +274,31 @@ class _RunContext:
         self.reset_device_stats = reset_device_stats
         self.powers = list(powers) if powers is not None else None
         self.collect = collect
+        # the run's work: a sub-region (the paper's ROI) or the program's
+        # full NDRange; containment/alignment is validated at submit time
+        self.run_region = region if region is not None \
+            else program.work_region
+
+    def _invoke(self, fn: Callable, region: Region) -> Callable:
+        """Adapt a packet's absolute row panel to the range-fn contract
+        (1-D: fn(offset, size); 2-D: fn(row0, n_rows, col0, n_cols))."""
+        if region.ndim == 2:
+            d0, d1 = region.dims
+
+            def call(_offset, _size):
+                return fn(d0.offset, d0.size, d1.offset, d1.size)
+        else:
+            d0 = region.dims[0]
+
+            def call(_offset, _size):
+                return fn(d0.offset, d0.size)
+        return call
 
     def execute(self) -> RunResult:
-        t_bin0 = time.perf_counter()
+        clock = PhaseClock()
+        clock.mark("start")
         prog = self.program
+        run_region = self.run_region
         n = len(self.devices)
         if self.reset_device_stats:
             for d in self.devices:
@@ -225,9 +308,13 @@ class _RunContext:
                 d.dead = False
 
         output = None
+        # output geometry follows the RUN's region (an ROI submit returns
+        # just its sub-region, rows relative to the region start)
+        out_cols = prog.out_cols if run_region.ndim == 1 \
+            else run_region.dims[1].size * prog.out_cols
         if self.collect is None:
-            out_rows = prog.total_work * prog.out_rows_per_wg
-            output = np.zeros((out_rows, prog.out_cols), prog.out_dtype)
+            out_rows = run_region.dims[0].size * prog.out_rows_per_wg
+            output = np.zeros((out_rows, out_cols), prog.out_dtype)
         profiles = [DeviceProfile(d.name,
                                   (self.powers[i] if self.powers else
                                    (d.throughput or 1.0 / d.throttle)))
@@ -235,7 +322,7 @@ class _RunContext:
         executed: List = []
         errors: List[BaseException] = []
         exec_lock = threading.Lock()
-        state: Dict[str, Any] = {"sched": None, "roi0": None, "inflight": 0}
+        state: Dict[str, Any] = {"sched": None, "inflight": 0}
         ready = threading.Barrier(n + 1)
         fns: List[Optional[Callable]] = [None] * n
         t0_busy = [d.busy_time for d in self.devices]
@@ -275,8 +362,11 @@ class _RunContext:
                         break
                     time.sleep(1e-3)
                     continue
+                pkt_region = pkt.region if pkt.region is not None \
+                    else run_region.row_panel(pkt.offset, pkt.size)
                 try:
-                    res, wg_s = dev.run_packet(fn, pkt.offset, pkt.size)
+                    res, wg_s = dev.run_packet(self._invoke(fn, pkt_region),
+                                               pkt.offset, pkt.size)
                 except DeviceFailure:
                     with exec_lock:
                         sched.requeue(pkt)
@@ -305,7 +395,7 @@ class _RunContext:
                         continue
                     r0 = pkt.offset * prog.out_rows_per_wg
                     r1 = (pkt.offset + pkt.size) * prog.out_rows_per_wg
-                    res = np.asarray(res).reshape(r1 - r0, prog.out_cols)
+                    res = np.asarray(res).reshape(r1 - r0, out_cols)
                     if self.registered_buffers:
                         output[r0:r1] = res           # in-place commit
                     else:
@@ -326,8 +416,7 @@ class _RunContext:
                         sched.mark_dead(i)
                         state["inflight"] -= 1
                     break
-            dev.finish_time = time.perf_counter() - state["roi0"] \
-                if state["roi0"] else 0.0
+            dev.finish_time = clock.since("roi") if clock.at("roi") else 0.0
 
         def start_threads() -> List[threading.Event]:
             return [self.pool.submit(_bind(device_thread, i))
@@ -338,7 +427,7 @@ class _RunContext:
             # Runtime prepares the scheduler concurrently with device compiles
             try:
                 state["sched"] = make_scheduler(self.scheduler_name,
-                                                prog.total_work, prog.lws,
+                                                run_region, run_region.dims[0].lws,
                                                 profiles,
                                                 **self.scheduler_kwargs)
             except BaseException:
@@ -349,8 +438,11 @@ class _RunContext:
                 for ev in done_events:
                     ev.wait()
                 raise
-            state["roi0"] = time.perf_counter()
+            # the barrier releases once every device finished compiling:
+            # everything before it is the init phase (compiles overlapped
+            # with scheduler prep), everything after is the ROI window
             ready.wait()
+            clock.mark("roi")
         else:
             # sequential: discovery+compile each device, then scheduler
             for i, d in enumerate(self.devices):
@@ -360,14 +452,15 @@ class _RunContext:
                     d.dead = True
                     errors.append(e)
             state["sched"] = make_scheduler(self.scheduler_name,
-                                            prog.total_work, prog.lws,
+                                            run_region, run_region.dims[0].lws,
                                             profiles, **self.scheduler_kwargs)
-            state["roi0"] = time.perf_counter()
             done_events = start_threads()
             ready.wait()
+            clock.mark("roi")
         for ev in done_events:
             ev.wait()
-        roi_time = time.perf_counter() - state["roi0"]
+        clock.mark("drained")
+        roi_time = clock.between("roi", "drained")
         if state["sched"].remaining() > 0:
             err = RuntimeError(
                 f"{prog.name}: {state['sched'].remaining()} work-groups "
@@ -381,16 +474,24 @@ class _RunContext:
                 if item[0] == "copy":
                     _, r0, r1, arr = item
                     output[r0:r1] = arr
-        binary_time = time.perf_counter() - t_bin0
+        clock.mark("assembled")
         packets = [it[1] for it in executed if it[0] == "pkt"]
+        clock.mark("end")
+        phases = PhaseBreakdown(
+            init_s=clock.between("start", "roi"),
+            offload_s=clock.between("roi", "assembled"),
+            roi_s=roi_time,
+            teardown_s=clock.between("assembled", "end"),
+        )
         result = RunResult(
             total_time=roi_time,
             device_busy=[d.busy_time - b0 for d, b0 in
                          zip(self.devices, t0_busy)],
             device_finish=[d.finish_time for d in self.devices],
             packets=packets,
-            binary_time=binary_time,
+            binary_time=clock.between("start", "end"),
             aborted_devices=sum(1 for d in self.devices if d.dead),
+            phases=phases,
         )
         result.output = output  # type: ignore[attr-defined]
         return result
@@ -401,68 +502,3 @@ def _bind(fn: Callable, i: int) -> Callable[[], None]:
     def bound():
         fn(i)
     return bound
-
-
-class Engine:
-    """DEPRECATED one-PR compatibility shim over ``repro.api.EngineSession``.
-
-    ``Engine(program, devices, ...)`` owns a private single-program session;
-    ``run()`` is ``session.submit(program).result()``.  Migrate:
-
-        Engine(prog, devs, scheduler=s).run()         # old
-        coexec(prog, devs, scheduler=s)               # new Tier-1
-        EngineSession(devs, scheduler=s).run(prog)    # new Tier-2
-
-    See docs/api.md for the full migration guide.  This shim will be
-    removed next PR.
-    """
-
-    def __init__(self, program: Program, devices: Sequence[DeviceGroup], *,
-                 scheduler: str = "hguided_opt",
-                 scheduler_kwargs: Optional[Dict] = None,
-                 opt_init: bool = True, opt_buffers: bool = True,
-                 init_cost_s: float = 0.0):
-        warnings.warn(
-            "Engine is deprecated; use repro.api.coexec (Tier-1) or "
-            "repro.api.EngineSession (Tier-2).  See docs/api.md.",
-            DeprecationWarning, stacklevel=2)
-        from repro.api.policies import BufferPolicy
-        from repro.api.session import EngineSession
-        self.program = program.validate()
-        self._session = EngineSession(
-            devices, scheduler=scheduler, scheduler_kwargs=scheduler_kwargs,
-            buffer_policy=BufferPolicy.from_flag(opt_buffers),
-            parallel_init=opt_init, cache_executables=opt_init,
-            init_cost_s=init_cost_s)
-
-    # -- old surface, delegated -------------------------------------------
-    @property
-    def devices(self) -> List[DeviceGroup]:
-        return self._session.devices
-
-    @property
-    def _compiled(self) -> Dict:
-        """Old tests/tools poked the cache; expose the session's view keyed
-        by device name (this shim serves exactly one program)."""
-        return {dev: fn for (_, dev), fn
-                in self._session.executables.items()}
-
-    def add_device(self, dev: DeviceGroup) -> None:
-        self._session.add_device(dev)
-
-    def remove_device(self, name: str) -> None:
-        self._session.remove_device(name)
-
-    def run(self, *, powers: Optional[List[float]] = None) -> RunResult:
-        return self._session.submit(self.program, powers=powers).result()
-
-    def close(self) -> None:
-        self._session.close()
-
-    def __del__(self):
-        # the old Engine held no threads; don't let the shim leak a
-        # dispatcher + worker pool per instance in out-of-tree loops
-        try:
-            self._session.close()
-        except Exception:
-            pass

@@ -1,9 +1,14 @@
 """Load-balancing schedulers (the paper's §II-B, faithful formulas).
 
-Work model: a single data-parallel task of ``G`` *work-groups* (the paper's
-NDRange work-groups; here: image rows, pixels blocks, options, bodies,
-microbatches, requests).  Packets are contiguous ``[offset, offset+size)``
-ranges, ``lws``-aligned except for the final remainder.
+Work model: a data-parallel task described by a :class:`repro.core.region.
+Region` — a 1-D or 2-D NDRange with per-dimension offset/size/lws.  The
+carved axis is dim 0 (the paper's NDRange work-groups; here: image rows,
+pixel blocks, options, bodies, microbatches, requests).  Packets are
+contiguous ``[offset, offset+size)`` runs of dim-0 units, ``lws``-aligned
+except for the final remainder; 2-D regions are carved as **row panels**
+(each packet spans the full dim-1 extent), and every packet carries its
+absolute geometry as ``Packet.region``.  A bare ``total_work`` integer is
+still accepted everywhere and means the legacy 1-D region at offset 0.
 
 * ``Static``      — one packet per device, sized proportionally to its
                     computing power; delivery order configurable
@@ -36,11 +41,18 @@ import inspect
 import math
 import threading
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
+
+from repro.core.region import Region, as_region
 
 
 @dataclass(frozen=True)
 class Packet:
+    # offset/size are dim-0 units RELATIVE to the scheduled region's start
+    # (so coverage invariants read [0, G) regardless of the ROI's origin);
+    # ``region`` is the packet's ABSOLUTE geometry — the row panel the
+    # executor runs
     offset: int
     size: int
     seq: int
@@ -49,6 +61,7 @@ class Packet:
     # and is re-issued with retried=True, so RunResult.packets never reports
     # more sequence numbers than packets actually carved
     retried: bool = False
+    region: Optional[Region] = None
 
 
 @dataclass
@@ -60,11 +73,15 @@ class DeviceProfile:
 
 
 class SchedulerBase:
-    def __init__(self, total_work: int, lws: int,
+    def __init__(self, total_work: Union[int, Region], lws: int,
                  devices: Sequence[DeviceProfile]):
-        assert total_work > 0 and lws > 0
-        self.G = total_work
-        self.lws = lws
+        """``total_work`` is a Region (NDRange) or a bare work-group count
+        (legacy 1-D).  With a Region, the carved axis is dim 0 and ``lws``
+        is taken from ``region.dims[0].lws`` (the argument is ignored)."""
+        self.region = as_region(total_work, lws)
+        self.G = self.region.dims[0].size
+        self.lws = self.region.dims[0].lws
+        assert self.G > 0 and self.lws > 0
         self.devices = list(devices)
         self._lock = threading.Lock()
         self._offset = 0
@@ -106,12 +123,17 @@ class SchedulerBase:
         self._seq += 1
         return self._seq - 1
 
+    def _packet(self, offset: int, size: int, device: int) -> Packet:
+        """Mint a packet: relative dim-0 carve + its absolute row panel."""
+        return Packet(offset, size, self._bump(), device,
+                      region=self.region.row_panel(offset, size))
+
     def _take(self, size: int, device: int) -> Optional[Packet]:
         left = self.G - self._offset
         if left <= 0:
             return None
         size = min(size, left)
-        pkt = Packet(self._offset, size, self._bump(), device)
+        pkt = self._packet(self._offset, size, device)
         self._offset += size
         return pkt
 
@@ -167,8 +189,7 @@ class StaticScheduler(SchedulerBase):
             self._given[device] = True
             return None
         self._given[device] = True
-        pkt = Packet(off, min(size, self.G - off), self._bump(), device)
-        return pkt
+        return self._packet(off, min(size, self.G - off), device)
 
     def mark_dead(self, device: int) -> None:
         # a dead device's unclaimed pre-assigned chunk is released to the
@@ -181,7 +202,7 @@ class StaticScheduler(SchedulerBase):
             off, size = self._chunk_bounds(device)
             size = min(size, self.G - off)
             if size > 0 and off < self.G:
-                self._retry.append(Packet(off, size, self._bump(), device))
+                self._retry.append(self._packet(off, size, device))
 
     def remaining(self) -> int:  # static: everything is pre-assigned
         with self._lock:
@@ -194,7 +215,7 @@ class DynamicScheduler(SchedulerBase):
 
     def __init__(self, total_work, lws, devices, n_packets: int = 128):
         super().__init__(total_work, lws, devices)
-        self.packet_size = self._align(math.ceil(total_work / n_packets))
+        self.packet_size = self._align(math.ceil(self.G / n_packets))
 
     def _carve(self, device: int) -> Optional[Packet]:
         return self._take(self.packet_size, device)
@@ -253,11 +274,13 @@ class HGuidedOptScheduler(HGuidedScheduler):
     in one unadaptable packet."""
 
     def __init__(self, total_work, lws, devices, ewma: float = 0.5):
+        region = as_region(total_work, lws)
+        G, lws = region.dims[0].size, region.dims[0].lws
         profs = tuned_profiles(devices)
         total_p = sum(d.power for d in profs) or 1.0
         n = len(profs)
         for d in profs:
-            share_wg = total_work * d.power / total_p
+            share_wg = G * d.power / total_p
             d.min_mult = max(1, min(d.min_mult, int(share_wg / (4 * lws))))
             if n > 8:
                 # fleet-scale adaptation (beyond paper): with near-equal
@@ -405,8 +428,11 @@ def scheduler_accepts(name: str, param: str) -> bool:
     return False
 
 
-def make_scheduler(name: str, total_work: int, lws: int,
+def make_scheduler(name: str, total_work: Union[int, Region], lws: int,
                    devices: Sequence[DeviceProfile], **kw) -> SchedulerBase:
+    """Build a registered scheduler over ``total_work`` — a Region
+    (NDRange; ``lws`` then comes from ``dims[0].lws``) or a legacy flat
+    work-group count."""
     spec = scheduler_spec(name)
     merged = {**spec.defaults, **kw}
     return spec.cls(total_work, lws, devices, **merged)

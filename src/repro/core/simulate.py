@@ -34,7 +34,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.metrics import RunResult
+from repro.core.metrics import PhaseBreakdown, RunResult
 from repro.core.scheduler import (DeviceProfile, make_scheduler,
                                   rotate_static_order)
 
@@ -188,7 +188,9 @@ def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
     init = cfg.init_cost_optimized if cfg.opt_init else cfg.init_cost
     return RunResult(total_time=roi, device_busy=busy, device_finish=finish,
                      packets=packets, binary_time=roi + init,
-                     aborted_devices=sum(dead))
+                     aborted_devices=sum(dead),
+                     phases=PhaseBreakdown(init_s=init, offload_s=roi,
+                                           roi_s=roi))
 
 
 def single_device_time(total_work: int, lws: int, device: SimDevice,

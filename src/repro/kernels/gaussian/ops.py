@@ -58,6 +58,25 @@ def run_range(img_padded, w, offset: int, size: int, *,
                 use_pallas=use_pallas, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("n_rows", "n_cols"))
+def _run_tile(img_padded, w, row0, col0, *, n_rows: int, n_cols: int):
+    Ks = w.shape[0]
+    block = jax.lax.dynamic_slice(
+        img_padded, (row0, col0), (n_rows + Ks - 1, n_cols + Ks - 1))
+    tmp = sum(w[k] * block[k:k + n_rows, :] for k in range(Ks))
+    return sum(w[k] * tmp[:, k:k + n_cols] for k in range(Ks))
+
+
+def run_region(img_padded, w, row0: int, n_rows: int,
+               col0: int, n_cols: int):
+    """Blur the output tile [row0, row0+n_rows) x [col0, col0+n_cols)
+    (the NDRange entry: coordinates in output pixels).  One compiled
+    executable serves every same-shape tile — re-offloading an ROI pays
+    only the kernel, as the paper's ROI mode requires."""
+    return _run_tile(img_padded, w, row0, col0,
+                     n_rows=n_rows, n_cols=n_cols)
+
+
 def total_work(img: np.ndarray) -> int:
     assert img.shape[0] % LWS == 0
     return img.shape[0] // LWS

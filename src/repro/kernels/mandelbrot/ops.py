@@ -35,6 +35,23 @@ def run_range(offset: int, size: int, *, width: int, height: int,
                 interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("n_rows", "n_cols", "width", "height",
+                                   "max_iter"))
+def _run_tile(row0, col0, *, n_rows: int, n_cols: int, width: int,
+              height: int, max_iter: int):
+    return R.escape_counts(row0, n_rows, width, height, max_iter,
+                           col0=col0, n_cols=n_cols)
+
+
+def run_region(row0: int, n_rows: int, col0: int, n_cols: int, *,
+               width: int, height: int, max_iter: int = MAX_ITER):
+    """Escape counts for the pixel tile [row0, row0+n_rows) x
+    [col0, col0+n_cols) (the NDRange entry, coordinates in pixels)."""
+    return _run_tile(jnp.int32(row0), jnp.int32(col0), n_rows=n_rows,
+                     n_cols=n_cols, width=width, height=height,
+                     max_iter=max_iter)
+
+
 def total_work(height: int) -> int:
     assert height % LWS == 0
     return height // LWS

@@ -11,12 +11,15 @@ Y0, Y1 = -1.5, 1.5
 
 
 def escape_counts(row0: int, n_rows: int, width: int, height: int,
-                  max_iter: int):
-    """Iteration counts for pixel rows [row0, row0+n_rows)."""
+                  max_iter: int, col0: int = 0, n_cols: int = 0):
+    """Iteration counts for the pixel tile rows [row0, row0+n_rows) x
+    cols [col0, col0+n_cols); n_cols=0 means the full width."""
+    if not n_cols:
+        n_cols = width
     ys = Y0 + (Y1 - Y0) * (jnp.arange(n_rows) + row0 + 0.5) / height
-    xs = X0 + (X1 - X0) * (jnp.arange(width) + 0.5) / width
-    cr = jnp.broadcast_to(xs[None, :], (n_rows, width))
-    ci = jnp.broadcast_to(ys[:, None], (n_rows, width))
+    xs = X0 + (X1 - X0) * (jnp.arange(n_cols) + col0 + 0.5) / width
+    cr = jnp.broadcast_to(xs[None, :], (n_rows, n_cols))
+    ci = jnp.broadcast_to(ys[:, None], (n_rows, n_cols))
 
     def body(_, st):
         zr, zi, cnt = st

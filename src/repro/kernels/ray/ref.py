@@ -53,13 +53,17 @@ def _intersect(orig, dirn, centers, radii):
     return jnp.take_along_axis(t, idx[..., None], axis=-1)[..., 0], idx
 
 
-def render_rows(scene, row0, n_rows: int, width: int, height: int):
-    """Shade pixel rows [row0, row0+n_rows) -> (n_rows, width, 3)."""
+def render_rows(scene, row0, n_rows: int, width: int, height: int,
+                col0=0, n_cols: int = 0):
+    """Shade the pixel tile rows [row0, row0+n_rows) x cols
+    [col0, col0+n_cols) -> (n_rows, n_cols, 3); n_cols=0 = full width."""
+    if not n_cols:
+        n_cols = width
     ys = (jnp.arange(n_rows) + row0 + 0.5) / height * 2.0 - 1.0
-    xs = (jnp.arange(width) + 0.5) / width * 2.0 - 1.0
-    dirx = jnp.broadcast_to(xs[None, :], (n_rows, width))
-    diry = jnp.broadcast_to(-ys[:, None], (n_rows, width))
-    dirz = jnp.ones((n_rows, width), jnp.float32)
+    xs = (jnp.arange(n_cols) + col0 + 0.5) / width * 2.0 - 1.0
+    dirx = jnp.broadcast_to(xs[None, :], (n_rows, n_cols))
+    diry = jnp.broadcast_to(-ys[:, None], (n_rows, n_cols))
+    dirz = jnp.ones((n_rows, n_cols), jnp.float32)
     d = jnp.stack([dirx, diry, dirz], axis=-1)
     d = d / jnp.linalg.norm(d, axis=-1, keepdims=True)
     o = jnp.zeros_like(d)

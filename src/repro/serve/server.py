@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.api.policies import OffloadMode
 from repro.api.session import EngineSession
 from repro.core.device import DeviceGroup
 from repro.core.runtime import Program
@@ -203,11 +204,13 @@ class CoexecServer:
             return fn
 
         # one work-group per admitted request; results are committed by the
-        # range function itself, so collect is a no-op sink
+        # range function itself, so collect is a no-op sink.  Rounds are
+        # BINARY offloads: each is self-contained (fresh build, teardown
+        # after) — a round program never recurs, so nothing must survive it
         prog = Program(f"round{self._round}", len(admitted), cfg.lws, build)
         self.session.submit(prog, powers=powers, scheduler=cfg.scheduler,
                             scheduler_kwargs=skw, collect=_no_collect,
-                            cache=False).result()
+                            mode=OffloadMode.BINARY).result()
         self._calibrated = True
 
     # -- main entry ----------------------------------------------------------

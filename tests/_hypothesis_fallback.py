@@ -1,7 +1,7 @@
 """Deterministic fallback for the `hypothesis` property-testing API.
 
 The test suite uses a small slice of hypothesis (`given`, `settings`,
-`strategies.integers/floats/lists/sampled_from`).  When the real library
+`strategies.integers/floats/lists/sampled_from/one_of/builds/tuples`).  When the real library
 is installed (see requirements-dev.txt) it is used untouched; when it is
 absent — hermetic CI images, the pinned repro container — importing this
 module registers a seeded random-sampling stand-in under
@@ -56,6 +56,23 @@ def sampled_from(seq):
     return _Strategy(lambda rng: rng.choice(seq))
 
 
+def one_of(*strategies):
+    return _Strategy(lambda rng: rng.choice(strategies).draw(rng))
+
+
+def builds(target, *arg_strategies, **kw_strategies):
+    def draw(rng):
+        args = [s.draw(rng) for s in arg_strategies]
+        kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+        return target(*args, **kwargs)
+
+    return _Strategy(draw)
+
+
+def tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
 def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
     def deco(fn):
         fn._fallback_settings = {"max_examples": max_examples}
@@ -95,7 +112,8 @@ def install() -> None:
         return
     hyp = types.ModuleType("hypothesis")
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "lists", "sampled_from"):
+    for name in ("integers", "floats", "lists", "sampled_from",
+                 "one_of", "builds", "tuples"):
         setattr(st, name, globals()[name])
     hyp.given = given
     hyp.settings = settings

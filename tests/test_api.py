@@ -1,5 +1,5 @@
 """The tiered co-execution API: Tier-1 coexec, Tier-2 EngineSession +
-RunHandles, Tier-3 extension points, and the deprecated Engine shim."""
+RunHandles, Tier-3 extension points."""
 import threading
 import time
 
@@ -12,7 +12,6 @@ from repro.api import (BufferPolicy, CancelledError, DevicePolicy,
                        scheduler_accepts, unregister_scheduler)
 from repro.core import programs as P
 from repro.core.device import DeviceGroup
-from repro.core.runtime import Engine
 from repro.core.scheduler import DynamicScheduler
 
 
@@ -56,12 +55,10 @@ def test_coexec_per_packet_buffer_policy(binomial_ref):
 
 # ------------------------------------------------------- Tier-2: sessions
 
-def test_submit_bit_identical_to_blocking_engine_run():
-    """Acceptance: RunHandle results == blocking Engine.run(), bitwise."""
+def test_submit_bit_identical_to_blocking_coexec():
+    """Acceptance: async RunHandle results == blocking Tier-1 run, bitwise."""
     prog = P.PROGRAMS["binomial"](**BINOMIAL_KW)
-    with pytest.warns(DeprecationWarning, match="Engine is deprecated"):
-        eng = Engine(prog, devices3())
-    blocking = eng.run()
+    blocking = coexec(prog, devices3())
     with EngineSession(devices3()) as session:
         async_res = session.submit(prog).result()
     assert np.array_equal(async_res.output, blocking.output)
@@ -126,6 +123,34 @@ def test_run_handle_cancel_queued():
             h2.result()
     # cancelling a completed handle is a no-op
     assert not h1.cancel()
+
+
+def test_cancel_queued_removes_submission_without_paying_init():
+    """Regression: cancelling a not-yet-dispatched submission must remove
+    it from the session queue immediately — done() flips right away, the
+    dispatcher never claims it, and no init is paid for it."""
+    slow = P.PROGRAMS["binomial"](**BINOMIAL_KW)
+
+    def build(dev):
+        def fn(offset, size):  # pragma: no cover - must never run
+            raise AssertionError("cancelled submission was dispatched")
+        return fn
+
+    doomed = Program("doomed", 16, 1, build)
+    with EngineSession(devices3(), init_cost_s=0.2) as session:
+        h1 = session.submit(slow)          # occupies the dispatcher
+        h2 = session.submit(doomed)
+        assert len(session._queue) >= 1    # doomed is queued
+        assert h2.cancel()
+        assert h2.done() and h2.cancelled()      # flips immediately...
+        assert all(s.handle is not h2 for s in session._queue)  # ...and gone
+        h1.result()
+        h3 = session.submit(slow)          # queue still serviceable
+        h3.result()
+        # the cancelled program's executables were never built: init was
+        # paid only for the real program (once per device)
+        assert all(k[0] != "doomed" for k in session.executables)
+        assert session.init_payments == 3
 
 
 def test_session_elastic_membership(binomial_ref):
@@ -217,9 +242,6 @@ def test_program_build_required_clear_error():
     with EngineSession(devices3()) as session:
         with pytest.raises(ValueError, match="'build' must be a callable"):
             session.submit(unbuildable)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="'build' must be a callable"):
-            Engine(unbuildable, devices3())
     with pytest.raises(ValueError, match="total_work"):
         Program("empty", 0, 1, lambda dev: (lambda o, s: None)).validate()
 
@@ -322,24 +344,6 @@ def test_static_device_policy_fixed_fleet():
     policy = StaticDevicePolicy(devices3())
     with EngineSession(device_policy=policy) as session:
         assert [d.name for d in session.devices] == ["cpu", "igpu", "gpu"]
-
-
-# --------------------------------------------------- deprecated shim
-
-def test_engine_shim_warns_and_delegates(binomial_ref):
-    prog = P.PROGRAMS["binomial"](**BINOMIAL_KW)
-    with pytest.warns(DeprecationWarning, match="Engine is deprecated"):
-        eng = Engine(prog, devices3(), init_cost_s=0.02)
-    r1 = eng.run()
-    r2 = eng.run()
-    np.testing.assert_allclose(r1.output, binomial_ref,
-                               rtol=1e-5, atol=1e-5)
-    assert np.array_equal(r1.output, r2.output)
-    assert set(eng._compiled) == {"cpu", "igpu", "gpu"}   # old cache view
-    eng.add_device(DeviceGroup("late"))
-    assert len(eng.devices) == 4
-    eng.remove_device("late")
-    assert len(eng.devices) == 3
 
 
 # ------------------------------------------------ provenance through API

@@ -1,0 +1,198 @@
+"""Region (NDRange) types + region carving invariants.
+
+Satellite property suite: 1-D and 2-D carves from EVERY scheduler tile the
+full region exactly once, lws-aligned per dimension — including under
+requeue and mark_dead faults (the engine's fault-tolerance semantics).
+"""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.region import Dim, Region, as_region
+from repro.core.scheduler import (DeviceProfile, available_schedulers,
+                                  make_scheduler)
+
+ALL_SCHEDULERS = ["static", "static_rev", "dynamic", "hguided",
+                  "hguided_opt", "hguided_deadline"]
+
+
+# ------------------------------------------------------------- value types
+
+def test_dim_validation():
+    with pytest.raises(ValueError, match="offset"):
+        Dim(-1, 4)
+    with pytest.raises(ValueError, match="size"):
+        Dim(0, 0)
+    with pytest.raises(ValueError, match="lws"):
+        Dim(0, 4, 0)
+    assert Dim(2, 6).end == 8
+
+
+def test_region_constructors_and_geometry():
+    line = Region.line(100, lws=8, offset=16)
+    assert line.ndim == 1 and line.work == 100 and line.shape == (100,)
+    rect = Region.rect(64, 32, lws=(8, 4), offset=(8, 4))
+    assert rect.ndim == 2 and rect.work == 64 * 32
+    assert rect.offsets == (8, 4)
+    with pytest.raises(ValueError, match="1-D and 2-D"):
+        Region((Dim(0, 4), Dim(0, 4), Dim(0, 4)))
+    assert as_region(50, lws=4) == Region.line(50, lws=4)
+    assert as_region(rect) is rect
+
+
+def test_region_containment_and_alignment():
+    full = Region.rect(64, 32, lws=(8, 4))
+    roi = Region.rect(16, 8, lws=(8, 4), offset=(8, 4))
+    assert full.contains(roi)
+    assert roi.aligned_within(full)
+    # misaligned offset in dim 1
+    skew = Region.rect(16, 8, lws=(8, 4), offset=(8, 3))
+    assert full.contains(skew) and not skew.aligned_within(full)
+    # a final remainder may stop exactly at the outer end...
+    ragged = Region.rect(60, 32, lws=(8, 4))
+    tail = Region.rect(4, 32, lws=(1, 1), offset=(56, 0))
+    assert tail.aligned_within(ragged)
+    # ...but not short of it
+    short = Region.rect(4, 32, lws=(1, 1), offset=(48, 0))
+    assert not short.aligned_within(ragged)
+    assert not full.contains(Region.rect(64, 33, lws=(1, 1)))
+    assert not full.contains(Region.line(64))          # ndim mismatch
+
+
+def test_row_panel():
+    r = Region.rect(64, 32, lws=(8, 4), offset=(16, 4))
+    p = r.row_panel(8, 16)
+    assert p.dims[0] == Dim(24, 16, 8)
+    assert p.dims[1] == r.dims[1]
+    with pytest.raises(ValueError, match="outside"):
+        r.row_panel(60, 8)
+
+
+# ----------------------------------------------------------- carve harness
+
+def _drain_with_faults(sched, n_dev, die_after, requeue_budget, seed):
+    """Round-robin drain with injected mid-run faults (same semantics as
+    the engine: deaths happen while HOLDING a pulled packet, which is
+    requeued; device 0 is immortal so work cannot strand)."""
+    rng = random.Random(seed)
+    executed = []
+    pulled = {i: 0 for i in range(n_dev)}
+    alive = set(range(n_dev))
+    budget = requeue_budget
+    while True:
+        progress = False
+        for i in sorted(alive):
+            pkt = sched.next_packet(i)
+            if pkt is None:
+                continue
+            progress = True
+            pulled[i] += 1
+            if i != 0 and die_after[i] is not None \
+                    and pulled[i] > die_after[i]:
+                sched.requeue(pkt)
+                sched.mark_dead(i)
+                alive.discard(i)
+                continue
+            if budget > 0 and not pkt.retried and rng.random() < 0.3:
+                budget -= 1
+                sched.requeue(pkt)
+                continue
+            executed.append(pkt)
+        if not progress:
+            return executed
+
+
+def assert_exact_region_tiling(packets, region):
+    """Every packet is an lws-aligned row panel of ``region``; together the
+    panels tile its dim-0 extent exactly once (no gaps, no overlaps) and
+    each spans the full trailing dims."""
+    assert packets, "no packets carved"
+    d0 = region.dims[0]
+    for p in packets:
+        assert p.region is not None
+        assert p.region.ndim == region.ndim
+        assert region.contains(p.region)
+        assert p.region.aligned_within(region)
+        assert p.region.dims[1:] == region.dims[1:]       # full row panels
+        # relative carve coordinates match the absolute panel
+        assert p.region.dims[0].offset == d0.offset + p.offset
+        assert p.region.dims[0].size == p.size
+    spans = sorted((p.region.dims[0].offset, p.region.dims[0].end)
+                   for p in packets)
+    pos = d0.offset
+    for a, b in spans:
+        assert a == pos, f"gap/overlap at {pos}: got {a}"
+        pos = b
+    assert pos == d0.end
+
+
+REGIONS_1D = st.builds(
+    lambda size, lws, off: Region.line(size, lws=lws, offset=off),
+    st.integers(1, 3000), st.integers(1, 32), st.integers(0, 64))
+
+REGIONS_2D = st.builds(
+    lambda r, c, lr, lc, orow, ocol: Region.rect(
+        r, c, lws=(lr, lc), offset=(orow, ocol)),
+    st.integers(1, 1500), st.integers(1, 128), st.integers(1, 16),
+    st.integers(1, 8), st.integers(0, 64), st.integers(0, 64))
+
+
+@given(region=st.one_of(REGIONS_1D, REGIONS_2D),
+       powers=st.lists(st.floats(0.05, 10.0), min_size=1, max_size=6),
+       name=st.sampled_from(ALL_SCHEDULERS))
+@settings(max_examples=120, deadline=None)
+def test_property_region_carving_exact_cover(region, powers, name):
+    """Fault-free: every scheduler tiles 1-D and 2-D regions exactly."""
+    devs = [DeviceProfile(f"d{i}", p) for i, p in enumerate(powers)]
+    sched = make_scheduler(name, region, 1, devs)
+    assert sched.region == region
+    out = []
+    active = set(range(len(devs)))
+    while active:
+        for i in list(active):
+            pkt = sched.next_packet(i)
+            if pkt is None:
+                active.discard(i)
+            else:
+                out.append(pkt)
+    assert_exact_region_tiling(out, region)
+    assert sched.remaining() == 0
+
+
+@given(region=st.one_of(REGIONS_1D, REGIONS_2D),
+       powers=st.lists(st.floats(0.05, 10.0), min_size=2, max_size=6),
+       name=st.sampled_from(ALL_SCHEDULERS),
+       deaths=st.lists(st.integers(0, 6), min_size=6, max_size=6),
+       requeue_budget=st.integers(0, 3),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=120, deadline=None)
+def test_property_region_carving_fault_tolerant(region, powers, name,
+                                                deaths, requeue_budget,
+                                                seed):
+    """Under random requeues and device deaths (mark_dead), the executed
+    packets still tile the region exactly once, per-dimension aligned."""
+    devs = [DeviceProfile(f"d{i}", p) for i, p in enumerate(powers)]
+    sched = make_scheduler(name, region, 1, devs)
+    die_after = [None] + [d if d < 4 else None
+                          for d in deaths[1:len(devs)]]
+    executed = _drain_with_faults(sched, len(devs), die_after,
+                                  requeue_budget, seed)
+    assert_exact_region_tiling(executed, region)
+    seqs = [p.seq for p in executed]
+    assert len(seqs) == len(set(seqs))
+    assert sched.remaining() == 0
+
+
+def test_every_registered_scheduler_covered_by_property_suite():
+    """Guard: a newly registered built-in must be added to ALL_SCHEDULERS
+    (plugins registered by other tests may come and go)."""
+    assert set(ALL_SCHEDULERS) <= set(available_schedulers())
+
+
+def test_legacy_int_work_still_carves_offset_zero():
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 3.0)]
+    sched = make_scheduler("dynamic", 256, 8, devs)
+    pkt = sched.next_packet(0)
+    assert pkt.region == Region.line(256, lws=8).row_panel(0, pkt.size)
+    assert sched.region == Region.line(256, lws=8)
