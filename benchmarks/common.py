@@ -8,14 +8,9 @@ deterministic given a seed); the baseline is the fastest single device
 """
 from __future__ import annotations
 
-import csv
-import io
-import sys
-import time
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence
 
-from repro.configs.paper_suite import (BENCHES, SCHED_CONFIGS, BenchSpec,
-                                       sim_devices)
+from repro.configs.paper_suite import BENCHES, SCHED_CONFIGS, sim_devices
 from repro.core import metrics as M
 from repro.core.simulate import SimConfig, simulate, single_device_time
 

@@ -20,7 +20,7 @@ import time
 from repro.configs.paper_suite import BENCHES, sim_devices
 from repro.core import metrics as M
 from repro.core.scheduler import DeviceProfile
-from repro.core.simulate import SimConfig, simulate, single_device_time
+from repro.core.simulate import SimConfig
 from repro.core import scheduler as S
 
 from benchmarks import common
@@ -35,9 +35,8 @@ def run_combo(spec, devs, m_triple, k_triple, n_runs=N_RUNS):
     for seed in range(n_runs):
         cfg = SimConfig(scheduler="hguided", opt_init=True, opt_buffers=True,
                         seed=seed)
-        profiles_patch = {"m": m_triple, "k": k_triple}
-        # monkey-level: pass tuned profiles via scheduler_kwargs is not
-        # supported; instead simulate with explicit profiles
+        # tuned (m, k) profiles are not expressible via scheduler_kwargs;
+        # simulate with explicit per-device profiles instead
         r = _simulate_with(spec, devs, m_triple, k_triple, cfg)
         ts.append(r.total_time)
     return sum(ts) / len(ts)
@@ -46,7 +45,6 @@ def run_combo(spec, devs, m_triple, k_triple, n_runs=N_RUNS):
 def _simulate_with(spec, devs, m_triple, k_triple, cfg):
     # build an HGuided scheduler with explicit per-device (m, k)
     import heapq
-    from repro.core.simulate import simulate as sim
     # easiest: temporarily wrap make_scheduler via profiles carried on devs
     profiles = [DeviceProfile(d.name, d.throughput * d.profile_bias,
                               min_mult=m_triple[i], k=k_triple[i])

@@ -11,7 +11,6 @@ Paper results reproduced here:
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time

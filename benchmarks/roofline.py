@@ -80,8 +80,6 @@ def analyze_records(records: List[Dict], counts: Dict[str, tuple]) -> List[Dict]
     rows = []
     for r in records:
         flops = r["flops_per_device"]
-        dot = r.get("dot_flops_per_device") or r.get("dot_flops") or None
-        trans = r.get("transcendentals_per_device", 0.0)
         traffic = r["traffic_bytes_per_device"]
         wire = r["collective_wire_bytes_per_device"]
         n = r["n_devices"]

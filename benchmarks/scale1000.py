@@ -14,7 +14,6 @@ import os
 import random
 import time
 
-from repro.core import metrics as M
 from repro.core.simulate import SimConfig, SimDevice, simulate
 
 N_GROUPS = 1024

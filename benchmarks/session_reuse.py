@@ -12,6 +12,8 @@ and checks the buffer registry reports exactly one registration per
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -43,17 +45,27 @@ def cold_vs_warm(n_options: int):
     return first.binary_time, warm, exact, single_reg
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    # parse_known_args: benchmarks.run drives every bench's main() with the
+    # driver's own argv still in place
+    args, _ = ap.parse_known_args(argv)
+
     t0 = time.time()
     print(f"{'n_options':>10s}{'cold_ms':>10s}{'warm_ms':>10s}"
           f"{'gap_%':>8s}{'exact':>7s}{'1xreg':>7s}")
     gaps = []
+    rows = []
     ok = True
     for n in (2048, 8192, 32768):
         cold, warm, exact, single_reg = cold_vs_warm(n)
         gap = 100 * (cold - warm) / cold
         gaps.append(gap)
         ok = ok and exact and single_reg and warm < cold
+        rows.append({"n_options": n, "cold_s": cold, "warm_s": warm,
+                     "gap_pct": gap, "exact": bool(exact),
+                     "single_registration": bool(single_reg)})
         print(f"{n:10d}{cold*1e3:10.1f}{warm*1e3:10.1f}"
               f"{gap:8.1f}{str(exact):>7s}{str(single_reg):>7s}")
     # the paper's binary-mode init-opt gap is the floor; cached executables
@@ -61,6 +73,12 @@ def main() -> int:
     ok = ok and min(gaps) >= PAPER_BINARY_GAP_PCT
     print(f"\nmin cold->warm binary gap {min(gaps):.1f}% "
           f"(paper init-opt floor: {PAPER_BINARY_GAP_PCT}%)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "min_gap_pct": min(gaps),
+                       "floor_pct": PAPER_BINARY_GAP_PCT, "ok": bool(ok)},
+                      f, indent=2)
+        print(f"wrote {args.json}")
     from benchmarks import common
     print(common.csv_line("session_reuse", (time.time()-t0)*1e6,
                           f"min_gap={min(gaps):.1f}%;"

@@ -1,0 +1,284 @@
+"""Transfer overlap: the memory subsystem's headline benchmark.
+
+Warm ROI submits through one EngineSession, three buffer policies:
+
+* ``POOLED`` — arena-recycled run buffers + the double-buffered transfer
+  pipeline (stage-in issued while the committer drains stage-out; commits
+  above the size crossover overlap compute on the committer thread).
+* ``REGISTERED`` — the paper's buffer-flag optimization alone: inputs
+  registered once, outputs committed in place, but a fresh (zeroed) output
+  allocation per run and every commit synchronous on the device thread.
+* ``PER_PACKET`` — the synchronous per-packet path (the paper's driver
+  worst practice): every packet re-syncs the program's full input + output
+  regions on the device thread, results are per-packet copies assembled at
+  the end.
+
+The threaded sweep varies the packet count (staging events per run) per
+kernel and reports the warm-ROI wall-clock reduction of pooled+overlapped
+over the synchronous per-packet path; the paper's 17.4 % ROI-mode headroom
+is the reference point.  Because container timing drifts, policies are
+interleaved at single-submit granularity (alternating rotation order) and
+each policy is summarized by its median submit time — slow drift and
+spiky noise both cancel.
+
+The simulator sweep runs the same three policies over calibrated devices
+with real transfer terms, per scheduler — the pooled pipeline hides
+per-packet transfers behind compute, so its unhidden h2d/d2h shrink
+toward the pipeline fill.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/transfer_overlap.py [--smoke] [--json F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import numpy as np
+
+from repro.api import BufferPolicy, EngineSession, OffloadMode, Region
+from repro.core import programs as P
+from repro.core.device import DeviceGroup
+from repro.core.simulate import SimConfig, SimDevice, simulate
+
+PAPER_ROI_GAIN_PCT = 17.4  # the paper's ROI-mode optimization headroom
+
+POLICIES = (
+    ("pooled", None),  # ROI submits default to POOLED
+    ("registered", BufferPolicy.REGISTERED),
+    ("per_packet", BufferPolicy.PER_PACKET),
+)
+
+
+def make_devices():
+    return [
+        DeviceGroup("cpu", throttle=4.0),
+        DeviceGroup("igpu", throttle=2.0),
+        DeviceGroup("gpu", throttle=1.0),
+    ]
+
+
+def center_roi(prog, row_frac: float) -> Region:
+    """A centered, lws-aligned row band spanning the full width — the
+    paper's repeated region-of-interest.  The *input* footprint stays the
+    whole workload, which is exactly why unregistered per-packet staging
+    hurts small-ROI offloads the most."""
+    full = prog.work_region
+    l0, l1 = (d.lws for d in full.dims)
+    rows = max(l0, int(full.dims[0].size * row_frac) // l0 * l0)
+    r0 = (full.dims[0].size - rows) // 2 // l0 * l0
+    return Region.rect(
+        rows, full.dims[1].size, lws=(l0, l1), offset=(r0, full.dims[1].offset)
+    )
+
+
+def threaded_sweep(kernel, prog_kw, row_frac, packet_counts, rounds):
+    """One kernel's packet-size sweep: per-submit round-robin over the
+    three policies (rotation order alternating each round), median submit
+    time per policy, plus exactness of every policy."""
+    prog = P.PROGRAMS[kernel](**prog_kw)
+    roi = center_roi(prog, row_frac)
+    ref = P.reference_output(kernel, **prog_kw)
+    d0, d1 = roi.dims
+    ref_roi = ref[
+        d0.offset * prog.out_rows_per_wg:d0.end * prog.out_rows_per_wg,
+        d1.offset * prog.out_cols:d1.end * prog.out_cols,
+    ]
+    points = []
+    exact = True
+    with EngineSession(make_devices()) as session:
+        session.register_workload(prog)
+        for n_packets in packet_counts:
+            # fixed equal-chunk carving pins packet (tile) shapes so the
+            # repeated offloads re-launch the same compiled executables
+            skw = dict(scheduler="dynamic",
+                       scheduler_kwargs={"n_packets": n_packets})
+
+            def run(policy):
+                return session.submit(
+                    prog, region=roi, mode=OffloadMode.ROI,
+                    buffer_policy=policy, **skw,
+                ).result()
+
+            for _, policy in POLICIES:
+                for _ in range(2):  # pin shapes, fill the arena ring
+                    r = run(policy)
+                exact = exact and np.allclose(
+                    r.output, ref_roi, rtol=1e-5, atol=1e-5
+                )
+
+            times = {name: [] for name, _ in POLICIES}
+            for rnd in range(rounds):
+                order = POLICIES if rnd % 2 == 0 else POLICIES[::-1]
+                for name, policy in order:
+                    t0 = time.perf_counter()
+                    run(policy)
+                    times[name].append(time.perf_counter() - t0)
+            med = {name: statistics.median(ts) for name, ts in times.items()}
+            points.append({
+                "n_packets": n_packets,
+                "pooled_ms": med["pooled"] * 1e3,
+                "registered_ms": med["registered"] * 1e3,
+                "per_packet_ms": med["per_packet"] * 1e3,
+                "gain_vs_per_packet_pct": 100
+                * (1 - med["pooled"] / med["per_packet"]),
+                "gain_vs_registered_pct": 100
+                * (1 - med["pooled"] / med["registered"]),
+            })
+    best = max(p["gain_vs_per_packet_pct"] for p in points)
+    return {
+        "kernel": kernel,
+        "region": repr(roi),
+        "points": points,
+        "best_gain_pct": best,
+        "exact": bool(exact),
+        "ok": bool(exact and best > 0.0),
+    }
+
+
+def sim_sweep(schedulers, packet_counts, total_work=65536, lws=8):
+    """Calibrated-device sweep: per-packet transfer terms, three policies.
+    A discrete multi-accelerator node (every device pays PCIe-style
+    transfers) — the pooled pipeline's overlap shows up as a shrinking ROI
+    and near-zero unhidden h2d/d2h as packets (staging events) multiply."""
+    devices = [
+        SimDevice("gpu", 4000.0, transfer_in=2e-5, transfer_out=2e-5),
+        SimDevice("gpu2", 1500.0, transfer_in=2e-5, transfer_out=2e-5),
+        SimDevice("cpu", 1000.0, zero_copy=True),
+    ]
+    rows = []
+    for sched in schedulers:
+        for n_packets in packet_counts:
+            kw = {"n_packets": n_packets} if sched == "dynamic" else {}
+            rec = {"scheduler": sched, "n_packets": n_packets}
+            for policy in ("per_packet", "registered", "pooled"):
+                r = simulate(
+                    total_work, lws, devices,
+                    SimConfig(scheduler=sched, scheduler_kwargs=kw,
+                              opt_init=True, buffer_policy=policy),
+                )
+                rec[policy] = {
+                    "roi_s": r.total_time,
+                    "h2d_s": r.phases.h2d_s,
+                    "d2h_s": r.phases.d2h_s,
+                }
+            rec["overlap_gain_pct"] = 100 * (
+                1 - rec["pooled"]["roi_s"] / rec["registered"]["roi_s"]
+            )
+            rec["vs_per_packet_pct"] = 100 * (
+                1 - rec["pooled"]["roi_s"] / rec["per_packet"]["roi_s"]
+            )
+            rows.append(rec)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes / few pairs (CI)")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    # parse_known_args: benchmarks.run drives every bench's main() with the
+    # driver's own argv still in place
+    args, _ = ap.parse_known_args(argv)
+
+    t0 = time.time()
+    # gaussian2d carves at lws 8 so a quarter-height ROI still splits into
+    # 16 packets; the small-ROI-of-a-big-image configuration is where
+    # per-packet staging of the FULL input hurts most (the paper's point)
+    if args.smoke:
+        kernels = [
+            ("gaussian2d", dict(h=512, w=512, lws=(8, 8)), 0.25),
+            ("mandelbrot2d", dict(px=512, max_iter=12), 1.0),
+        ]
+        packet_counts = [8, 16]
+        rounds = 15
+    else:
+        kernels = [
+            ("gaussian2d", dict(h=512, w=512, lws=(8, 8)), 0.25),
+            ("mandelbrot2d", dict(px=512, max_iter=16), 1.0),
+            ("ray1_2d", dict(px=192), 1.0),
+        ]
+        packet_counts = [4, 8, 16, 32]
+        rounds = 24
+
+    print(
+        f"{'kernel':14s}{'n_pkt':>6s}{'pooled':>9s}{'reg':>9s}"
+        f"{'per_pkt':>9s}{'vs_sync%':>9s}{'vs_reg%':>9s}"
+    )
+    sweeps = []
+    for kernel, kw, frac in kernels:
+        rec = threaded_sweep(kernel, kw, frac, packet_counts, rounds)
+        sweeps.append(rec)
+        for p in rec["points"]:
+            print(
+                f"{kernel:14s}{p['n_packets']:6d}"
+                f"{p['pooled_ms']:9.2f}{p['registered_ms']:9.2f}"
+                f"{p['per_packet_ms']:9.2f}"
+                f"{p['gain_vs_per_packet_pct']:9.2f}"
+                f"{p['gain_vs_registered_pct']:9.2f}"
+            )
+        print(
+            f"{kernel:14s} best warm-ROI gain vs synchronous per-packet: "
+            f"{rec['best_gain_pct']:.1f}% (exact={rec['exact']})"
+        )
+
+    print("\nsimulator (calibrated transfers, overlap per scheduler):")
+    sim_scheds = ["static", "dynamic", "hguided_opt"]
+    sim_counts = [8, 32] if args.smoke else [8, 32, 128]
+    sim = sim_sweep(sim_scheds, sim_counts)
+    print(
+        f"{'scheduler':14s}{'n_pkt':>6s}{'per_pkt':>9s}{'reg':>9s}"
+        f"{'pooled':>9s}{'overlap%':>9s}"
+    )
+    for rec in sim:
+        print(
+            f"{rec['scheduler']:14s}{rec['n_packets']:6d}"
+            f"{rec['per_packet']['roi_s']:9.4f}"
+            f"{rec['registered']['roi_s']:9.4f}"
+            f"{rec['pooled']['roi_s']:9.4f}"
+            f"{rec['overlap_gain_pct']:9.2f}"
+        )
+    sim_ok = all(
+        rec["pooled"]["roi_s"] <= rec["registered"]["roi_s"] + 1e-9
+        for rec in sim
+    )
+
+    min_gain = min(r["best_gain_pct"] for r in sweeps)
+    winning = sum(1 for r in sweeps if r["ok"])
+    ok = winning >= 2 and all(r["exact"] for r in sweeps) and sim_ok
+    print(
+        f"\npooled+overlapped beats the synchronous per-packet path on "
+        f"{winning}/{len(sweeps)} kernels (min best gain {min_gain:.1f}%; "
+        f"paper ROI headroom reference: {PAPER_ROI_GAIN_PCT}%); "
+        f"sim overlap monotone: {sim_ok}"
+    )
+
+    payload = {
+        "sweeps": sweeps,
+        "sim": sim,
+        "min_gain_pct": min_gain,
+        "kernels_winning": winning,
+        "ok": bool(ok),
+        "smoke": bool(args.smoke),
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+
+    from benchmarks import common
+
+    print(
+        common.csv_line(
+            "transfer_overlap",
+            (time.time() - t0) * 1e6,
+            f"min_gain={min_gain:.1f}%;winning={winning};ok={ok}",
+        )
+    )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

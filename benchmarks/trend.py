@@ -1,0 +1,103 @@
+"""Benchmark-trend gate: merge headline ratios, compare to the baseline.
+
+CI's ``bench-trend`` job runs ``session_reuse.py``, ``offload_modes.py
+--smoke`` and ``transfer_overlap.py --smoke`` with ``--json``, then calls
+this script to (a) merge the three result files into one ``BENCH_PR.json``
+artifact and (b) fail the job if any **headline ratio** regresses more
+than ``--tolerance`` (default 10 %) below the committed
+``benchmarks/baseline.json``.
+
+Headline ratios (all higher-is-better percentages):
+
+* ``session_reuse_min_gap_pct``      — cold->warm binary gap floor
+  (executable-cache amortization; paper init-opt floor 7.5 %).
+* ``offload_modes_best_gap_pct``     — best binary->ROI gap (paper's
+  17.4 % ROI-mode headroom).
+* ``transfer_overlap_min_gain_pct``  — min-over-kernels best warm-ROI
+  gain of pooled+overlapped over the synchronous per-packet path.
+
+Baseline values are committed *derated* from locally measured numbers so
+the gate trips on real regressions, not container noise.
+
+Usage:
+  python benchmarks/trend.py --session-reuse sr.json --offload-modes om.json
+      --transfer-overlap to.json [--baseline benchmarks/baseline.json]
+      [--out BENCH_PR.json] [--tolerance 0.10]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def headline_metrics(sr: dict, om: dict, to: dict) -> dict:
+    return {
+        "session_reuse_min_gap_pct": sr["min_gap_pct"],
+        "offload_modes_best_gap_pct": max(
+            s["gap_pct"] for s in om["sweeps"]
+        ),
+        "transfer_overlap_min_gain_pct": to["min_gain_pct"],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--session-reuse", required=True)
+    ap.add_argument("--offload-modes", required=True)
+    ap.add_argument("--transfer-overlap", required=True)
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--out", default="BENCH_PR.json")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional regression vs baseline")
+    args = ap.parse_args(argv)
+
+    raw = {}
+    for key, path in (("session_reuse", args.session_reuse),
+                      ("offload_modes", args.offload_modes),
+                      ("transfer_overlap", args.transfer_overlap)):
+        raw[key] = json.loads(pathlib.Path(path).read_text())
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())
+
+    metrics = headline_metrics(raw["session_reuse"], raw["offload_modes"],
+                               raw["transfer_overlap"])
+    failures = []
+    for name, base in baseline["metrics"].items():
+        if name not in metrics:
+            failures.append(f"{name}: missing from merged results")
+            continue
+        floor = base * (1.0 - args.tolerance)
+        got = metrics[name]
+        status = "ok" if got >= floor else "REGRESSED"
+        print(f"{name:36s} {got:8.2f} vs baseline {base:8.2f} "
+              f"(floor {floor:8.2f}) {status}")
+        if got < floor:
+            failures.append(
+                f"{name}: {got:.2f} < floor {floor:.2f} "
+                f"(baseline {base:.2f}, tolerance {args.tolerance:.0%})")
+    for key in raw:
+        if not raw[key].get("ok", False):
+            failures.append(f"{key}: its own acceptance check failed")
+
+    merged = {
+        "metrics": metrics,
+        "baseline": baseline["metrics"],
+        "tolerance": args.tolerance,
+        "pass": not failures,
+        "failures": failures,
+        "raw": raw,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(merged, indent=2))
+    print(f"wrote {args.out}")
+    if failures:
+        print("\nbench-trend gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("bench-trend gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,7 +19,11 @@ Three tiers, increasing control:
 Work geometry is first-class: ``Region``/``Dim`` describe 1-D and 2-D
 NDRanges with per-dimension offset/size/lws; every scheduler carves them
 (2-D as row panels) and every ``RunResult`` carries a per-phase
-``PhaseBreakdown`` (init / offload / roi / teardown).
+``PhaseBreakdown`` (init / h2d / roi / d2h / teardown).  The memory
+subsystem (``repro.core.membuf``) backs ``BufferPolicy.POOLED`` — the
+default for warm ROI submits: run buffers lease from the session's
+``BufferArena`` and staging overlaps compute on the ``TransferPipeline``
+(pooled outputs are recycled views; copy what you keep).
 
 See docs/api.md for the tier table and the offload-modes guide.
 """
@@ -28,6 +32,7 @@ from repro.api.policies import (BufferPolicy, DevicePolicy, OffloadMode,
                                 StaticDevicePolicy)
 from repro.api.session import EngineSession
 from repro.api.tier1 import coexec
+from repro.core.membuf import ArenaStats, BufferArena, TransferPipeline
 from repro.core.metrics import PhaseBreakdown
 from repro.core.region import Dim, Region
 from repro.core.runtime import Program
@@ -35,8 +40,9 @@ from repro.core.scheduler import (available_schedulers, register_scheduler,
                                   scheduler_accepts, unregister_scheduler)
 
 __all__ = [
-    "BufferPolicy", "CancelledError", "DevicePolicy", "Dim", "EngineSession",
-    "OffloadMode", "PhaseBreakdown", "Program", "Region", "RunHandle",
-    "StaticDevicePolicy", "available_schedulers", "coexec",
+    "ArenaStats", "BufferArena", "BufferPolicy", "CancelledError",
+    "DevicePolicy", "Dim", "EngineSession", "OffloadMode", "PhaseBreakdown",
+    "Program", "Region", "RunHandle", "StaticDevicePolicy",
+    "TransferPipeline", "available_schedulers", "coexec",
     "register_scheduler", "scheduler_accepts", "unregister_scheduler",
 ]

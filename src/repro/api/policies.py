@@ -12,6 +12,10 @@ import enum
 from typing import List, Sequence
 
 from repro.core.device import DeviceGroup
+from repro.core.membuf import BufferPolicy
+
+__all__ = ["BufferPolicy", "DevicePolicy", "OffloadMode",
+           "StaticDevicePolicy"]
 
 
 class OffloadMode(enum.Enum):
@@ -38,27 +42,9 @@ class OffloadMode(enum.Enum):
     ROI = "roi"
 
 
-class BufferPolicy(enum.Enum):
-    """How the Runtime feeds inputs and commits outputs (formalizes the old
-    boolean ``opt_buffers``).
-
-    * ``REGISTERED`` — the paper's optimization: inputs are registered once
-      per device as read-only buffers (zero-copy slice views feed each
-      packet), outputs are committed in place into a preallocated result.
-    * ``PER_PACKET`` — the worst practice the paper's drivers exhibited:
-      every packet bulk-copies, results are assembled from per-packet
-      copies at the end.  Kept as a measurable baseline.
-    """
-    REGISTERED = "registered"
-    PER_PACKET = "per_packet"
-
-    @classmethod
-    def from_flag(cls, opt_buffers: bool) -> "BufferPolicy":
-        return cls.REGISTERED if opt_buffers else cls.PER_PACKET
-
-    @property
-    def registered(self) -> bool:
-        return self is BufferPolicy.REGISTERED
+# BufferPolicy lives in repro.core.membuf (the memory subsystem owns the
+# Runtime's buffer-handling contracts: PER_PACKET / REGISTERED / POOLED);
+# it is re-exported here because it is a Tier-3 policy surface.
 
 
 class DevicePolicy:

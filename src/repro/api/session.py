@@ -35,9 +35,10 @@ import dataclasses
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.device import DeviceGroup
+from repro.core.membuf import ArenaStats, BufferArena
 from repro.core.metrics import RunResult
 from repro.core.region import Region
 from repro.core.runtime import Program, WorkerPool, _RunContext
@@ -57,6 +58,7 @@ class _Submission:
     collect: Optional[Callable]
     region: Optional[Region] = None
     mode: Optional[OffloadMode] = None
+    buffer_policy: Optional[BufferPolicy] = None
     handle: RunHandle = field(default=None)  # type: ignore[assignment]
 
 
@@ -72,6 +74,8 @@ class EngineSession:
                  cache_executables: bool = True,
                  init_cost_s: float = 0.0,
                  reset_device_stats: bool = True,
+                 arena_capacity_bytes: int = 256 << 20,
+                 arena_ring: int = 2,
                  name: str = "session"):
         scheduler_spec(scheduler)            # fail fast on unknown names
         self.device_policy = device_policy or DevicePolicy()
@@ -87,6 +91,10 @@ class EngineSession:
         self.init_cost_s = init_cost_s
         self.reset_device_stats = reset_device_stats
         self.name = name
+        # the memory subsystem: session-owned buffer arena backing POOLED
+        # runs (register_workload/evict manage its entries; close drains it)
+        self.arena = BufferArena(capacity_bytes=arena_capacity_bytes,
+                                 ring=arena_ring, name=f"{name}-arena")
 
         self._executables: Dict[Tuple[str, str], Callable] = {}
         self._buffer_registry: Dict[Tuple[str, str], int] = {}
@@ -138,7 +146,8 @@ class EngineSession:
             return dict(self._buffer_registry)
 
     def evict(self, program_name: str) -> None:
-        """Drop a program's cached executables/buffers (all devices)."""
+        """Drop a program's cached executables/buffers (all devices) and
+        its arena entries (pooled run buffers)."""
         with self._lock:
             for key in [k for k in self._executables
                         if k[0] == program_name]:
@@ -146,6 +155,12 @@ class EngineSession:
             for key in [k for k in self._buffer_registry
                         if k[0] == program_name]:
                 del self._buffer_registry[key]
+        self.arena.evict(program_name)
+
+    @property
+    def arena_stats(self) -> ArenaStats:
+        """Counters/gauges of the session's buffer arena."""
+        return self.arena.stats
 
     # -- workload registry (ROI offloading) ----------------------------------
     @property
@@ -189,6 +204,16 @@ class EngineSession:
                 t.join()
             if errors:
                 raise errors[0]
+            # pre-populate the arena's output ring for the full-region
+            # shape, so even the FIRST pooled ROI submit of the whole
+            # workload hits instead of allocating (sub-region ROIs create
+            # their own keys on first submit and are warm from the second)
+            region = program.work_region
+            out_cols = program.out_cols if region.ndim == 1 \
+                else region.dims[1].size * program.out_cols
+            out_rows = region.dims[0].size * program.out_rows_per_wg
+            self.arena.register(program.name, "host", (out_rows, out_cols),
+                                program.out_dtype)
         with self._lock:
             self._workloads[program.name] = program
         return program
@@ -229,7 +254,8 @@ class EngineSession:
                collect: Optional[Callable] = None,
                cache: bool = True,
                region: Optional[Region] = None,
-               mode: Optional[OffloadMode] = None) -> RunHandle:
+               mode: Optional[OffloadMode] = None,
+               buffer_policy: Optional[BufferPolicy] = None) -> RunHandle:
         """Enqueue a program; returns a future-like RunHandle immediately.
 
         ``powers`` overrides the per-device computing powers for this run;
@@ -249,6 +275,13 @@ class EngineSession:
         teardown charged to this run's phase breakdown), ``ROI`` requires
         the program to be ``register_workload``-ed and executes warm
         against the registered executables/buffers.
+
+        ``buffer_policy`` overrides the session's buffer handling for this
+        run.  ROI submits default to ``BufferPolicy.POOLED`` (arena-backed
+        output + overlapped transfer pipeline — note the pooled
+        result-lifetime contract: ``output`` is a recycled view, valid
+        until the workload's ring cycles); everything else defaults to the
+        session policy.
         """
         program.validate()
         if scheduler is not None:
@@ -302,12 +335,17 @@ class EngineSession:
             skw = dict(self.scheduler_kwargs)
         else:
             skw = {}
+        if buffer_policy is None and mode is OffloadMode.ROI:
+            # pooled is the default for warm ROI submits: that is where
+            # buffer reuse and transfer overlap actually pay off
+            buffer_policy = BufferPolicy.POOLED
         sub = _Submission(
             program=program, powers=powers,
             scheduler=scheduler or self.scheduler,
             scheduler_kwargs=skw,
             cache=cache, collect=collect,
-            region=region, mode=mode)
+            region=region, mode=mode,
+            buffer_policy=buffer_policy)
         with self._cv:
             if self._closing:
                 raise RuntimeError(f"session {self.name!r} is closed")
@@ -358,6 +396,8 @@ class EngineSession:
             raise ValueError(
                 f"{sub.program.name}: got {len(sub.powers)} powers for "
                 f"{len(devices)} devices")
+        policy = sub.buffer_policy if sub.buffer_policy is not None \
+            else self.buffer_policy
         ctx = _RunContext(
             sub.program, devices,
             scheduler=sub.scheduler,
@@ -365,7 +405,8 @@ class EngineSession:
             compile_fn=lambda dev: self._compile_for(sub.program, dev,
                                                      sub.cache),
             pool=self._pool,
-            registered_buffers=self.buffer_policy.registered,
+            buffer_policy=policy,
+            arena=self.arena if policy.pooled else None,
             parallel_init=self.parallel_init,
             reset_device_stats=self.reset_device_stats,
             powers=sub.powers,
@@ -388,13 +429,19 @@ class EngineSession:
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
-        """Drain queued runs, stop the dispatcher, release the pool."""
+        """Drain queued runs, release the arena, stop the pool — in that
+        order.  The dispatch queue must drain *before* the arena closes
+        (an in-flight pooled run acquires from it) and the arena must
+        release its entries *before* ``WorkerPool.close()`` — a close
+        racing in-flight submits must not leak arena entries behind a
+        dead pool."""
         with self._cv:
             if self._closing:
                 return
             self._closing = True
             self._cv.notify_all()
-        self._dispatcher.join()
+        self._dispatcher.join()              # drains every queued submit
+        self.arena.close()                   # pooled buffers released
         self._pool.close()
 
     def __enter__(self) -> "EngineSession":

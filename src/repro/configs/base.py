@@ -12,9 +12,8 @@ Every arch module exposes ``CONFIG`` (full size, dry-run only) and ``smoke()``
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration

@@ -18,7 +18,7 @@ spheres are; Mandelbrot: interior pixels run the full 5000 iterations).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.simulate import SimDevice

@@ -15,7 +15,7 @@ injects a hard device failure after N packets (fault-tolerance tests).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 
 @dataclass(frozen=True)
@@ -22,12 +22,26 @@ class PhaseBreakdown:
 
     * ``init_s``      — setup: executable builds (or cache hits) overlapped
                         with scheduler preparation, buffer registration.
+    * ``h2d_s``       — host-to-device staging: the initial stage-in wave
+                        (scheduler pull + launch binding + input staging)
+                        before the first packet computes.
     * ``roi_s``       — the ROI window: packet dispatch + compute, first
                         carve to queue drained (== ``RunResult.total_time``).
-    * ``offload_s``   — the offload window: ``roi_s`` plus result
-                        assembly/commit (the data path back to the host).
+    * ``d2h_s``       — device-to-host staging: the commit tail after the
+                        queue drains (result conversion + assembly still
+                        in flight on the transfer pipeline).
+    * ``offload_s``   — the offload window: ``h2d_s + roi_s + d2h_s`` (the
+                        full data path to and from the devices).
     * ``teardown_s``  — releasing per-run state; for BINARY-mode submits
                         also the cache/buffer eviction.
+
+    In the threaded engine the five windows are disjoint wall segments, so
+    ``init_s + h2d_s + roi_s + d2h_s + teardown_s == binary`` exactly and
+    ``offload_s == h2d_s + roi_s + d2h_s``.  The simulator keeps transfer
+    costs inside its event timeline (``offload_s == roi_s``) and reports
+    ``h2d_s`` / ``d2h_s`` as the *unhidden* transfer components charged to
+    that timeline — under ``BufferPolicy.POOLED`` the double-buffered
+    pipeline hides per-packet staging behind compute, shrinking them.
 
     ``binary = init_s + offload_s + teardown_s`` is the paper's binary-mode
     response time; ``roi_s`` alone is its ROI-mode response time.
@@ -36,10 +50,17 @@ class PhaseBreakdown:
     offload_s: float = 0.0
     roi_s: float = 0.0
     teardown_s: float = 0.0
+    h2d_s: float = 0.0
+    d2h_s: float = 0.0
 
     @property
     def binary(self) -> float:
         return self.init_s + self.offload_s + self.teardown_s
+
+    @property
+    def staging(self) -> float:
+        """The transfer (staging) time on the run's critical path."""
+        return self.h2d_s + self.d2h_s
 
     @property
     def management(self) -> float:

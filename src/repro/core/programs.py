@@ -16,9 +16,8 @@ so the real-execution benches stay fast on one CPU; the simulator
 (configs/paper_suite.py) carries the full calibrated sizes."""
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -49,7 +48,8 @@ def gaussian_program(h: int = 1024, w: int = 512, seed: int = 0,
         return fn
 
     return Program("gaussian", G, 1, build,
-                   out_rows_per_wg=gaussian_ops.LWS, out_cols=w)
+                   out_rows_per_wg=gaussian_ops.LWS, out_cols=w,
+                   in_bytes=ip.nbytes + wts.nbytes)
 
 
 def gaussian_program_2d(h: int = 512, w: int = 512, seed: int = 0,
@@ -69,7 +69,8 @@ def gaussian_program_2d(h: int = 512, w: int = 512, seed: int = 0,
         return fn
 
     return Program("gaussian2d", build=build,
-                   region=Region.rect(h, w, lws=lws))
+                   region=Region.rect(h, w, lws=lws),
+                   in_bytes=ip.nbytes + wts.nbytes)
 
 
 def mandelbrot_program_2d(px: int = 256, max_iter: int = 256,
@@ -99,7 +100,8 @@ def ray_program_2d(which: int = 1, px: int = 256,
         return fn
 
     return Program(f"ray{which}_2d", build=build,
-                   region=Region.rect(px, px, lws=lws), out_cols=3)
+                   region=Region.rect(px, px, lws=lws), out_cols=3,
+                   in_bytes=sum(v.nbytes for v in scene.values()))
 
 
 def binomial_program(n_options: int = 65536, seed: int = 0,
@@ -116,7 +118,8 @@ def binomial_program(n_options: int = 65536, seed: int = 0,
         return fn
 
     return Program("binomial", G, 1, build,
-                   out_rows_per_wg=binomial_ops.LWS, out_cols=1)
+                   out_rows_per_wg=binomial_ops.LWS, out_cols=1,
+                   in_bytes=s0.nbytes + k0.nbytes + ty.nbytes)
 
 
 def mandelbrot_program(px: int = 512, max_iter: int = 256,
@@ -150,7 +153,8 @@ def nbody_program(n_bodies: int = 8192, seed: int = 0,
         return fn
 
     return Program("nbody", G, 1, build,
-                   out_rows_per_wg=nbody_ops.LWS, out_cols=7)
+                   out_rows_per_wg=nbody_ops.LWS, out_cols=7,
+                   in_bytes=pm.nbytes + vel.nbytes)
 
 
 def ray_program(which: int = 1, px: int = 256) -> Program:
@@ -166,7 +170,8 @@ def ray_program(which: int = 1, px: int = 256) -> Program:
         return fn
 
     return Program(f"ray{which}", G, 1, build,
-                   out_rows_per_wg=ray_ops.LWS * px, out_cols=3)
+                   out_rows_per_wg=ray_ops.LWS * px, out_cols=3,
+                   in_bytes=sum(v.nbytes for v in scene.values()))
 
 
 PROGRAMS = {

@@ -25,7 +25,7 @@ registered buffers do not back.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence, Tuple, Union
+from typing import Tuple, Union
 
 __all__ = ["Dim", "Region", "as_region"]
 

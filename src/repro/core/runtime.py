@@ -60,6 +60,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.device import DeviceFailure, DeviceGroup
+from repro.core.membuf import BufferArena, BufferPolicy, TransferPipeline
 from repro.core.metrics import PhaseBreakdown, RunResult
 from repro.core.region import Region
 from repro.core.scheduler import DeviceProfile, SchedulerBase, make_scheduler
@@ -76,11 +77,21 @@ class PhaseClock:
 
     def __init__(self):
         self._t: Dict[str, float] = {}
+        self._once = threading.Lock()
 
     def mark(self, name: str) -> float:
         t = time.perf_counter()
         self._t[name] = t
         return t
+
+    def mark_once(self, name: str) -> float:
+        """Set ``name`` only if unset (first caller wins; thread-safe) —
+        e.g. the ROI mark stamped by whichever device computes first."""
+        with self._once:
+            t = self._t.get(name)
+            if t is None:
+                t = self.mark(name)
+            return t
 
     def at(self, name: str) -> Optional[float]:
         return self._t.get(name)
@@ -114,6 +125,11 @@ class Program:
     out_cols: int = 1
     out_dtype: Any = np.float32
     region: Optional[Region] = None       # full NDRange (None = legacy 1-D)
+    # read-only input footprint (bytes).  Registered/pooled buffers stage
+    # it once per device; BufferPolicy.PER_PACKET re-stages it on every
+    # packet (a real host copy of this size — the paper's "unnecessary
+    # complete bulk copies of memory regions", the sim's BULK_COPY term).
+    in_bytes: int = 0
 
     def __post_init__(self):
         if self.region is not None:
@@ -256,6 +272,8 @@ class _RunContext:
                  compile_fn: Callable[[DeviceGroup], Callable],
                  pool: WorkerPool,
                  registered_buffers: bool = True,
+                 buffer_policy: Optional[BufferPolicy] = None,
+                 arena: Optional[BufferArena] = None,
                  parallel_init: bool = True,
                  reset_device_stats: bool = True,
                  powers: Optional[List[float]] = None,
@@ -269,7 +287,12 @@ class _RunContext:
         self.scheduler_kwargs = dict(scheduler_kwargs)
         self.compile_fn = compile_fn
         self.pool = pool
-        self.registered_buffers = registered_buffers
+        # buffer_policy supersedes the legacy registered_buffers bool (kept
+        # for callers that predate the memory subsystem)
+        self.buffer_policy = buffer_policy if buffer_policy is not None \
+            else BufferPolicy.from_flag(registered_buffers)
+        self.registered_buffers = self.buffer_policy.registered
+        self.arena = arena
         self.parallel_init = parallel_init
         self.reset_device_stats = reset_device_stats
         self.powers = list(powers) if powers is not None else None
@@ -312,9 +335,19 @@ class _RunContext:
         # just its sub-region, rows relative to the region start)
         out_cols = prog.out_cols if run_region.ndim == 1 \
             else run_region.dims[1].size * prog.out_cols
+        pipe: Optional[TransferPipeline] = None
+        use_pipeline = self.buffer_policy.pooled and self.collect is None
         if self.collect is None:
             out_rows = run_region.dims[0].size * prog.out_rows_per_wg
-            output = np.zeros((out_rows, out_cols), prog.out_dtype)
+            if self.buffer_policy.pooled and self.arena is not None:
+                # pooled: the run output is a recycled arena buffer, not a
+                # fresh allocation.  No zeroing needed — packets tile the
+                # run region exactly, and a commit failure fails the run.
+                output = self.arena.acquire(prog.name, "host",
+                                            (out_rows, out_cols),
+                                            prog.out_dtype).array
+            else:
+                output = np.zeros((out_rows, out_cols), prog.out_dtype)
         profiles = [DeviceProfile(d.name,
                                   (self.powers[i] if self.powers else
                                    (d.throughput or 1.0 / d.throttle)))
@@ -322,30 +355,95 @@ class _RunContext:
         executed: List = []
         errors: List[BaseException] = []
         exec_lock = threading.Lock()
-        state: Dict[str, Any] = {"sched": None, "inflight": 0}
+        state: Dict[str, Any] = {"sched": None, "inflight": 0,
+                                 "commit_failed": 0}
         ready = threading.Barrier(n + 1)
+        compiled_ev = threading.Event()
         fns: List[Optional[Callable]] = [None] * n
         t0_busy = [d.busy_time for d in self.devices]
+        if use_pipeline:
+            pipe = TransferPipeline(self.pool)
+            pipe.start()
 
-        def device_thread(i: int):
-            dev = self.devices[i]
-            if self.parallel_init:
-                # parallel AOT compile, overlapped with Runtime's prep
+        def mark_roi():
+            # the ROI window opens when the first packet is ready to
+            # compute; ordering after the "compiled" mark keeps the five
+            # phase windows disjoint (exact wall-clock identity)
+            if clock.at("roi") is None:
+                compiled_ev.wait()
+                clock.mark_once("roi")
+
+        def fetch_and_stage(i: int, fn: Callable):
+            """Stage-in for device ``i``: pull the next packet and bind its
+            launch (the H2D window's host work)."""
+            t0 = time.perf_counter()
+            with exec_lock:
+                pkt = sched_of(i).next_packet(i)
+                if pkt is not None:
+                    state["inflight"] += 1
+            if pkt is None:
+                return None
+            try:
+                pkt_region = pkt.region if pkt.region is not None \
+                    else run_region.row_panel(pkt.offset, pkt.size)
+                call = self._invoke(fn, pkt_region)
+            except BaseException:
+                with exec_lock:
+                    sched_of(i).requeue(pkt)
+                    state["inflight"] -= 1
+                raise
+            if pipe is not None:
+                pipe.note_h2d(time.perf_counter() - t0)
+            return pkt, call
+
+        def sched_of(i: int) -> SchedulerBase:
+            return state["sched"]
+
+        def make_commit(pkt, res):
+            def commit():
                 try:
-                    fns[i] = self.compile_fn(dev)
-                except Exception as e:      # compile failure = dead device
-                    dev.dead = True
+                    r0 = pkt.offset * prog.out_rows_per_wg
+                    r1 = (pkt.offset + pkt.size) * prog.out_rows_per_wg
+                    output[r0:r1] = np.asarray(res).reshape(r1 - r0,
+                                                            out_cols)
+                    with exec_lock:
+                        executed.append(("pkt", pkt))
+                except Exception as e:
+                    # host-side commit failure is fatal for the run: the
+                    # packet was accounted done at stage-out, so the drain
+                    # check cannot catch it — fail the run explicitly
                     with exec_lock:
                         errors.append(e)
-            ready.wait()
-            sched: SchedulerBase = state["sched"]
-            if sched is None:
-                return                        # scheduler construction failed
-            fn = fns[i]
-            if fn is None:
-                sched.mark_dead(i)            # compile failed: release work
-                return
+                        state["commit_failed"] += 1
+            return commit
+
+        def abort_pipelined(i, pkt, err):
+            """Requeue the in-flight packet and release the device (same
+            provenance rules as the sync path)."""
+            with exec_lock:
+                if err is not None:
+                    errors.append(err)
+                sched = sched_of(i)
+                sched.requeue(pkt)
+                state["inflight"] -= 1
+                sched.mark_dead(i)
+
+        def device_loop_sync(i: int, dev: DeviceGroup, fn: Callable,
+                             sched: SchedulerBase):
+            # the unregistered-buffer pathology: every packet re-syncs the
+            # program's full memory regions — read-only inputs AND the
+            # whole output region — on the device thread (real host copies
+            # sized by the actual footprints; the sim's BULK_COPY term)
+            in_src = in_scratch = None
+            stage_bytes = 0
+            if not self.registered_buffers:
+                stage_bytes = prog.in_bytes + (output.nbytes
+                                               if output is not None else 0)
+            if stage_bytes > 0:
+                in_src = np.empty(stage_bytes, np.uint8)
+                in_scratch = np.empty(stage_bytes, np.uint8)
             while True:
+                mark_roi()
                 with exec_lock:
                     pkt = sched.next_packet(i)
                     if pkt is not None:
@@ -364,6 +462,8 @@ class _RunContext:
                     continue
                 pkt_region = pkt.region if pkt.region is not None \
                     else run_region.row_panel(pkt.offset, pkt.size)
+                if in_src is not None:
+                    np.copyto(in_scratch, in_src)     # per-packet bulk copy
                 try:
                     res, wg_s = dev.run_packet(self._invoke(fn, pkt_region),
                                                pkt.offset, pkt.size)
@@ -416,72 +516,189 @@ class _RunContext:
                         sched.mark_dead(i)
                         state["inflight"] -= 1
                     break
+
+        def device_loop_pipelined(i: int, dev: DeviceGroup, fn: Callable,
+                                  sched: SchedulerBase):
+            """stage-in -> compute -> stage-out, double-buffered: packet
+            k's stage-out is handed to the committer and packet k+1's
+            stage-in is issued immediately — the device thread moves on to
+            the next compute while the committer drains k's D2H, and never
+            blocks on host staging.  (On hosts where stage-in itself is
+            heavy, ``TransferPipeline.prefetch`` runs it on a stager
+            thread concurrently with compute; the bound launches here are
+            host-cheap, so the runtime issues them inline and the
+            simulator carries the calibrated H2D-overlap model.)"""
+            itemsize = np.dtype(prog.out_dtype).itemsize
+
+            def abort_stage_in(e: BaseException) -> None:
+                # a stage-in failure must release the device like any other
+                # fatal error — swallowing it would strand a pre-assigned
+                # static chunk and livelock the surviving devices
+                dev.dead = True
+                with exec_lock:
+                    errors.append(e)
+                    sched.mark_dead(i)
+
+            try:
+                staged = fetch_and_stage(i, fn)
+            except Exception as e:
+                abort_stage_in(e)
+                return
+            while True:
+                if staged is None:
+                    with exec_lock:
+                        drained = (state["inflight"] == 0
+                                   and sched.remaining() == 0)
+                        alive_others = any(not d.dead for j, d in
+                                           enumerate(self.devices) if j != i)
+                    if drained or not alive_others:
+                        break
+                    time.sleep(1e-3)
+                    try:
+                        staged = fetch_and_stage(i, fn)
+                    except Exception as e:
+                        abort_stage_in(e)
+                        return
+                    continue
+                pkt, call = staged
+                mark_roi()
+                try:
+                    res, wg_s = dev.run_packet(call, pkt.offset, pkt.size)
+                except DeviceFailure:
+                    abort_pipelined(i, pkt, None)
+                    break
+                except Exception as e:
+                    dev.dead = True
+                    abort_pipelined(i, pkt, e)
+                    break
+                try:
+                    if hasattr(sched, "observe"):
+                        sched.observe(i, wg_s)
+                    nbytes = (pkt.size * prog.out_rows_per_wg * out_cols
+                              * itemsize)
+                    pipe.stage_out(make_commit(pkt, res), nbytes)
+                    with exec_lock:
+                        state["inflight"] -= 1
+                except Exception as e:
+                    dev.dead = True
+                    abort_pipelined(i, pkt, e)
+                    break
+                try:
+                    staged = fetch_and_stage(i, fn)
+                except Exception as e:
+                    # stage-in failure (bad geometry): the fetch released
+                    # its own accounting; release the device and surface
+                    abort_stage_in(e)
+                    break
+
+        def device_thread(i: int):
+            dev = self.devices[i]
+            if self.parallel_init:
+                # parallel AOT compile, overlapped with Runtime's prep
+                try:
+                    fns[i] = self.compile_fn(dev)
+                except Exception as e:      # compile failure = dead device
+                    dev.dead = True
+                    with exec_lock:
+                        errors.append(e)
+            ready.wait()
+            sched: SchedulerBase = state["sched"]
+            if sched is None:
+                return                        # scheduler construction failed
+            fn = fns[i]
+            if fn is None:
+                sched.mark_dead(i)            # compile failed: release work
+                return
+            if use_pipeline:
+                device_loop_pipelined(i, dev, fn, sched)
+            else:
+                device_loop_sync(i, dev, fn, sched)
             dev.finish_time = clock.since("roi") if clock.at("roi") else 0.0
 
         def start_threads() -> List[threading.Event]:
             return [self.pool.submit(_bind(device_thread, i))
                     for i in range(n)]
 
-        if self.parallel_init:
-            done_events = start_threads()
-            # Runtime prepares the scheduler concurrently with device compiles
-            try:
+        try:
+            if self.parallel_init:
+                done_events = start_threads()
+                # Runtime prepares the scheduler concurrently with compiles
+                try:
+                    state["sched"] = make_scheduler(
+                        self.scheduler_name, run_region,
+                        run_region.dims[0].lws, profiles,
+                        **self.scheduler_kwargs)
+                except BaseException:
+                    # release the pooled threads parked at the barrier (they
+                    # see sched=None and exit) before surfacing the error —
+                    # a raise here must not wedge n workers forever
+                    ready.wait()
+                    for ev in done_events:
+                        ev.wait()
+                    raise
+                # the barrier releases once every device finished compiling:
+                # everything before it is the init phase (compiles
+                # overlapped with scheduler prep); the staging (h2d) and
+                # ROI windows follow
+                ready.wait()
+            else:
+                # sequential: discovery+compile each device, then scheduler
+                for i, d in enumerate(self.devices):
+                    try:
+                        fns[i] = self.compile_fn(d)
+                    except Exception as e:
+                        d.dead = True
+                        errors.append(e)
                 state["sched"] = make_scheduler(self.scheduler_name,
-                                                run_region, run_region.dims[0].lws,
+                                                run_region,
+                                                run_region.dims[0].lws,
                                                 profiles,
                                                 **self.scheduler_kwargs)
-            except BaseException:
-                # release the pooled threads parked at the barrier (they see
-                # sched=None and exit) before surfacing the error — a raise
-                # here must not wedge n workers forever
+                done_events = start_threads()
                 ready.wait()
-                for ev in done_events:
-                    ev.wait()
-                raise
-            # the barrier releases once every device finished compiling:
-            # everything before it is the init phase (compiles overlapped
-            # with scheduler prep), everything after is the ROI window
-            ready.wait()
-            clock.mark("roi")
-        else:
-            # sequential: discovery+compile each device, then scheduler
-            for i, d in enumerate(self.devices):
-                try:
-                    fns[i] = self.compile_fn(d)
-                except Exception as e:
-                    d.dead = True
-                    errors.append(e)
-            state["sched"] = make_scheduler(self.scheduler_name,
-                                            run_region, run_region.dims[0].lws,
-                                            profiles, **self.scheduler_kwargs)
-            done_events = start_threads()
-            ready.wait()
-            clock.mark("roi")
-        for ev in done_events:
-            ev.wait()
-        clock.mark("drained")
-        roi_time = clock.between("roi", "drained")
-        if state["sched"].remaining() > 0:
-            err = RuntimeError(
-                f"{prog.name}: {state['sched'].remaining()} work-groups "
-                "unprocessed — all devices failed")
-            if errors:
-                raise err from errors[0]
-            raise err
-        if self.collect is None and not self.registered_buffers:
-            # assemble results from per-packet copies (bulk copy at the end)
-            for item in executed:
-                if item[0] == "copy":
-                    _, r0, r1, arr = item
-                    output[r0:r1] = arr
-        clock.mark("assembled")
-        packets = [it[1] for it in executed if it[0] == "pkt"]
-        clock.mark("end")
+            clock.mark("compiled")
+            compiled_ev.set()
+            for ev in done_events:
+                ev.wait()
+            clock.mark("drained")
+            roi_time = clock.between("roi", "drained")
+            if pipe is not None:
+                # drain the commit tail: everything still on the committer
+                # after the queue drained is the run's D2H window
+                pipe.flush()
+            if state["sched"].remaining() > 0:
+                err = RuntimeError(
+                    f"{prog.name}: {state['sched'].remaining()} work-groups "
+                    "unprocessed — all devices failed")
+                if errors:
+                    raise err from errors[0]
+                raise err
+            if state["commit_failed"]:
+                err = RuntimeError(
+                    f"{prog.name}: {state['commit_failed']} packet "
+                    "commit(s) failed on the transfer pipeline")
+                if errors:
+                    raise err from errors[0]
+                raise err
+            if self.collect is None and not self.registered_buffers:
+                # assemble results from per-packet copies (bulk copy at end)
+                for item in executed:
+                    if item[0] == "copy":
+                        _, r0, r1, arr = item
+                        output[r0:r1] = arr
+            clock.mark("assembled")
+            packets = [it[1] for it in executed if it[0] == "pkt"]
+            clock.mark("end")
+        finally:
+            if pipe is not None:
+                pipe.close()
         phases = PhaseBreakdown(
-            init_s=clock.between("start", "roi"),
-            offload_s=clock.between("roi", "assembled"),
+            init_s=clock.between("start", "compiled"),
+            offload_s=clock.between("compiled", "assembled"),
             roi_s=roi_time,
             teardown_s=clock.between("assembled", "end"),
+            h2d_s=clock.between("compiled", "roi"),
+            d2h_s=clock.between("drained", "assembled"),
         )
         result = RunResult(
             total_time=roi_time,

@@ -27,7 +27,10 @@ def make_inputs(n_options: int, seed: int = 0):
 @partial(jax.jit, static_argnames=("size", "use_pallas", "interpret"))
 def _run(s0, strike, ty, offset, *, size: int, use_pallas: bool = False,
          interpret: bool = True):
-    sl = lambda x: jax.lax.dynamic_slice(x, (offset,), (size,))
+
+    def sl(x):
+        return jax.lax.dynamic_slice(x, (offset,), (size,))
+
     a, b, c = sl(s0), sl(strike), sl(ty)
     if use_pallas:
         return K.price_options(a, b, c, steps=STEPS, tile=min(128, size),

@@ -6,7 +6,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_decode import kernel as K
 from repro.kernels.flash_decode import ref as R

@@ -9,7 +9,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.gaussian import kernel as K

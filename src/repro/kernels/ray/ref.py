@@ -11,9 +11,7 @@ Ray vs Ray2).
 """
 from __future__ import annotations
 
-from functools import partial
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -26,8 +26,11 @@ SDS = jax.ShapeDtypeStruct
 
 
 def _sh_tree(resolver, abstract, axes, *, param):
-    is_ax = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
+
+    def is_ax(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+
     return jax.tree.map(
         lambda ax, leaf: resolver.sharding(ax, leaf.shape, param=param),
         axes, abstract, is_leaf=is_ax)

@@ -25,9 +25,7 @@ data source.
 """
 from __future__ import annotations
 
-import json
 import re
-from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 

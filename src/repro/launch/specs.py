@@ -8,7 +8,7 @@ trees the resolver consumes.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,8 +68,11 @@ def abstract_params_unstacked(cfg: ModelConfig):
         jax.tree.map(lambda t: SDS(t.shape[1:], t.dtype), blocks)
         for _ in range(n)
     ]
-    is_ax = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
+
+    def is_ax(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+
     inner_axes = jax.tree.map(lambda ax: ax[1:], axes["blocks"], is_leaf=is_ax)
     axes["blocks"] = [inner_axes] * n
     return params, axes

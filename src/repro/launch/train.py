@@ -15,11 +15,9 @@ runs on CPU at reduced scale unless --full is passed.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.ckpt import checkpoint as CK
 from repro.configs import get_config, get_smoke

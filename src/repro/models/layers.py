@@ -15,12 +15,10 @@ working set bounded, and does not pay the 2x masked-FLOP tax of the naive
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.parallel.sharding import constrain

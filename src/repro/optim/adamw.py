@@ -4,7 +4,7 @@ resolver's FSDP rules shard them over the data axes for free)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +43,10 @@ def lr_at(opt: OptConfig, step):
 
 def init_state(params, opt: OptConfig) -> TrainState:
     mdt = jnp.dtype(opt.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, mdt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, mdt)
+
     return TrainState(step=jnp.zeros((), jnp.int32), params=params,
                       mu=jax.tree.map(zeros, params),
                       nu=jax.tree.map(zeros, params))

@@ -15,7 +15,7 @@ same ``Request`` fields, both are summarized here.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 from repro.serve.workload import Request
 

@@ -11,8 +11,7 @@ serving.  All functions are pure; shardings are applied by the launcher via
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,5 @@
 """The tiered co-execution API: Tier-1 coexec, Tier-2 EngineSession +
 RunHandles, Tier-3 extension points."""
-import threading
-import time
 
 import numpy as np
 import pytest

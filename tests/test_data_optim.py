@@ -1,5 +1,4 @@
 """Data pipeline determinism/sliceability + optimizer + compression tests."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

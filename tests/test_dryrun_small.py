@@ -33,8 +33,13 @@ opt = OptConfig()
 state_abs, state_axes = SP.abstract_train_state(cfg, opt)
 batch_abs = SP.input_specs(cfg, shape)
 batch_axes = SP.batch_logical_axes(cfg, shape)
-is_ax = lambda x: isinstance(x, tuple) and all(
-    isinstance(e, (str, type(None))) for e in x)
+
+
+def is_ax(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
 st_sh = jax.tree.map(lambda ax, l: resolver.sharding(ax, l.shape, param=True),
                      state_axes, state_abs, is_leaf=is_ax)
 b_sh = jax.tree.map(lambda ax, l: resolver.sharding(ax, l.shape),

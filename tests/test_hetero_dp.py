@@ -2,7 +2,6 @@
 convergence, straggler-proportional row assignment, failure absorption,
 elastic membership, compression path."""
 import jax
-import pytest
 
 from repro.configs import get_smoke
 from repro.configs.base import ShapeConfig

@@ -3,11 +3,9 @@ real train step on CPU; asserts shapes, finiteness, and that the update
 changed the parameters."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_smoke, shapes_for
-from repro.configs.base import SMOKE_SHAPE, ShapeConfig
 from repro.models import transformer as T
 from repro.optim.adamw import OptConfig
 from repro.optim import adamw

@@ -9,9 +9,14 @@ from repro.core.scheduler import (SCHEDULERS, DeviceProfile,
                                   HGuidedDeadlineScheduler,
                                   HGuidedOptScheduler, make_scheduler)
 from repro.core.simulate import SimConfig, SimDevice, simulate_serving
-from repro.serve import (Request, RequestQueue, bursty_arrivals,
-                         make_requests, poisson_arrivals, summarize,
-                         trace_arrivals)
+from repro.serve import (
+    RequestQueue,
+    bursty_arrivals,
+    make_requests,
+    poisson_arrivals,
+    summarize,
+    trace_arrivals,
+)
 from repro.serve.stats import percentile
 
 

@@ -4,7 +4,6 @@ the best scheduler under the calibrated testbed, and the two runtime
 optimizations improve binary/ROI modes — the paper's headline claims as
 executable assertions."""
 import numpy as np
-import pytest
 
 from repro.api import coexec
 from repro.configs.paper_suite import BENCHES, SCHED_CONFIGS, sim_devices
