@@ -10,7 +10,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Sequence
 
-from repro.configs.paper_suite import BENCHES, SCHED_CONFIGS, sim_devices
+from repro.configs.paper_suite import (BENCHES, SCHED_CONFIGS, dispatch_for,
+                                       sim_devices)
 from repro.core import metrics as M
 from repro.core.simulate import SimConfig, simulate, single_device_time
 
@@ -33,7 +34,7 @@ def run_bench_matrix(*, opt_init: bool = True, opt_buffers: bool = True,
             for seed in range(n_runs):
                 cfg = SimConfig(scheduler=sched, scheduler_kwargs=kw,
                                 opt_init=opt_init, opt_buffers=opt_buffers,
-                                seed=seed)
+                                dispatch=dispatch_for(sched), seed=seed)
                 r = simulate(spec.total_work, spec.lws, devs, cfg)
                 ts.append(r.total_time)
                 bins.append(r.binary_time)

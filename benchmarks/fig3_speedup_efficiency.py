@@ -26,13 +26,23 @@ def main() -> int:
     os.makedirs("artifacts/bench", exist_ok=True)
     with open("artifacts/bench/fig3.json", "w") as f:
         json.dump(records, f, indent=1)
-    # paper-claim checks
-    ok = best == "HGuided opt"
+    # paper-claim checks: the HGuided family stays best, and the repo's
+    # new algorithm (lease-amortized dispatch + work-stealing tail) is at
+    # least as efficient as every pre-existing scheduler under the
+    # pessimistic heterogeneous-power profile
+    ok = best in ("HGuided opt", "HGuided steal")
     hg, hgo = gm["HGuided"], gm["HGuided opt"]
+    steal = gm["HGuided steal"]
+    best_existing = max(v for k, v in gm.items() if k != "HGuided steal")
+    steal_ok = steal + 1e-9 >= best_existing
+    ok = ok and steal_ok
     print(f"HGuided {hg:.3f} -> optimized {hgo:.3f} "
           f"(+{100*(hgo-hg)/hg:.1f}%; paper: +3%)")
+    print(f"HGuided steal {steal:.4f} vs best existing {best_existing:.4f} "
+          f"(steal >= existing: {steal_ok})")
     print(common.csv_line("fig3_geomean_eff_hguided_opt", (time.time()-t0)*1e6,
-                          f"eff={hgo:.3f};best={best};ok={ok}"))
+                          f"eff={hgo:.3f};steal={steal:.3f};best={best};"
+                          f"ok={ok}"))
     return 0 if ok else 1
 
 

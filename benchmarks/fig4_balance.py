@@ -21,10 +21,15 @@ def main() -> int:
     with open("artifacts/bench/fig4.json", "w") as f:
         json.dump(records, f, indent=1)
     hgo = gm["HGuided opt"]
-    ok = hgo >= 0.9 and hgo >= gm["Static"]
-    print(f"\nHGuided opt balance geomean: {hgo:.3f} (paper: 0.97)")
+    steal = gm["HGuided steal"]
+    # the work-stealing tail must hold balance at least as well as the
+    # paper's best tuned variant (stolen packets are exactly the ones a
+    # loaded device had planned but not started)
+    ok = hgo >= 0.9 and hgo >= gm["Static"] and steal + 1e-9 >= hgo
+    print(f"\nHGuided opt balance geomean: {hgo:.3f} (paper: 0.97); "
+          f"HGuided steal: {steal:.3f}")
     print(common.csv_line("fig4_balance_hguided_opt", (time.time()-t0)*1e6,
-                          f"balance={hgo:.3f};ok={ok}"))
+                          f"balance={hgo:.3f};steal={steal:.3f};ok={ok}"))
     return 0 if ok else 1
 
 

@@ -28,6 +28,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.configs.paper_suite import dispatch_for
 from repro.core.simulate import SimConfig, SimDevice, simulate_serving
 from repro.serve import (ARRIVALS, make_requests, summarize)
 
@@ -40,6 +41,9 @@ SCHED_CONFIGS = [
     ("HGuided", "hguided", {}),
     ("HGuided opt", "hguided_opt", {}),
     ("HGuided ddl", "hguided_deadline", {}),
+    # the new algorithm: deadline-capable HGuided under lease-amortized
+    # dispatch with a work-stealing tail (leased hand-off model)
+    ("HGuided steal", "hguided_steal", {}),
 ]
 
 
@@ -81,7 +85,8 @@ def run_cell(sched: str, kwargs: Dict, load_frac: float, *, n_requests: int,
         reqs = make_requests(arrivals, slo)
         cfg = SimConfig(scheduler=sched, scheduler_kwargs=dict(kwargs),
                         opt_init=True, opt_buffers=True,
-                        host_cost_per_packet=1e-4, seed=seed)
+                        host_cost_per_packet=1e-4, seed=seed,
+                        dispatch=dispatch_for(sched))
         res = simulate_serving(reqs, 1, make_replica_fleet(seed), cfg,
                                policy="shed",
                                batch_window_s=2 * N_REPLICAS / CAPACITY_WG_S,
@@ -149,6 +154,7 @@ def main(argv=None) -> int:
         s = table["Static"][k]["slo_attainment"]
         ok &= table["HGuided opt"][k]["slo_attainment"] > s
         ok &= table["HGuided ddl"][k]["slo_attainment"] > s
+        ok &= table["HGuided steal"][k]["slo_attainment"] > s
     if stressed:
         print(f"\nguided > static SLO attainment at stressed loads "
               f"{stressed}: {ok}")

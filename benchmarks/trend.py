@@ -1,11 +1,11 @@
 """Benchmark-trend gate: merge headline ratios, compare to the baseline.
 
 CI's ``bench-trend`` job runs ``session_reuse.py``, ``offload_modes.py
---smoke`` and ``transfer_overlap.py --smoke`` with ``--json``, then calls
-this script to (a) merge the three result files into one ``BENCH_PR.json``
-artifact and (b) fail the job if any **headline ratio** regresses more
-than ``--tolerance`` (default 10 %) below the committed
-``benchmarks/baseline.json``.
+--smoke``, ``transfer_overlap.py --smoke`` and ``sched_overhead.py
+--smoke`` with ``--json``, then calls this script to (a) merge the
+result files into one ``BENCH_PR.json`` artifact and (b) fail the job if
+any **headline ratio** regresses more than ``--tolerance`` (default
+10 %) below the committed ``benchmarks/baseline.json``.
 
 Headline ratios (all higher-is-better percentages):
 
@@ -15,13 +15,17 @@ Headline ratios (all higher-is-better percentages):
   17.4 % ROI-mode headroom).
 * ``transfer_overlap_min_gain_pct``  — min-over-kernels best warm-ROI
   gain of pooled+overlapped over the synchronous per-packet path.
+* ``sched_overhead_min_gain_pct``    — min-over-kernels gain of leased
+  dispatch (the work-stealing scheduler) over the per-packet-lock
+  hand-off at the highest packet count.
 
 Baseline values are committed *derated* from locally measured numbers so
 the gate trips on real regressions, not container noise.
 
 Usage:
   python benchmarks/trend.py --session-reuse sr.json --offload-modes om.json
-      --transfer-overlap to.json [--baseline benchmarks/baseline.json]
+      --transfer-overlap to.json --sched-overhead so.json
+      [--baseline benchmarks/baseline.json]
       [--out BENCH_PR.json] [--tolerance 0.10]
 """
 from __future__ import annotations
@@ -32,13 +36,14 @@ import pathlib
 import sys
 
 
-def headline_metrics(sr: dict, om: dict, to: dict) -> dict:
+def headline_metrics(sr: dict, om: dict, to: dict, so: dict) -> dict:
     return {
         "session_reuse_min_gap_pct": sr["min_gap_pct"],
         "offload_modes_best_gap_pct": max(
             s["gap_pct"] for s in om["sweeps"]
         ),
         "transfer_overlap_min_gain_pct": to["min_gain_pct"],
+        "sched_overhead_min_gain_pct": so["min_gain_pct"],
     }
 
 
@@ -47,6 +52,7 @@ def main(argv=None) -> int:
     ap.add_argument("--session-reuse", required=True)
     ap.add_argument("--offload-modes", required=True)
     ap.add_argument("--transfer-overlap", required=True)
+    ap.add_argument("--sched-overhead", required=True)
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--out", default="BENCH_PR.json")
     ap.add_argument("--tolerance", type=float, default=0.10,
@@ -56,12 +62,14 @@ def main(argv=None) -> int:
     raw = {}
     for key, path in (("session_reuse", args.session_reuse),
                       ("offload_modes", args.offload_modes),
-                      ("transfer_overlap", args.transfer_overlap)):
+                      ("transfer_overlap", args.transfer_overlap),
+                      ("sched_overhead", args.sched_overhead)):
         raw[key] = json.loads(pathlib.Path(path).read_text())
     baseline = json.loads(pathlib.Path(args.baseline).read_text())
 
     metrics = headline_metrics(raw["session_reuse"], raw["offload_modes"],
-                               raw["transfer_overlap"])
+                               raw["transfer_overlap"],
+                               raw["sched_overhead"])
     failures = []
     for name, base in baseline["metrics"].items():
         if name not in metrics:

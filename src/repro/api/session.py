@@ -59,6 +59,7 @@ class _Submission:
     region: Optional[Region] = None
     mode: Optional[OffloadMode] = None
     buffer_policy: Optional[BufferPolicy] = None
+    dispatch: Optional[str] = None
     handle: RunHandle = field(default=None)  # type: ignore[assignment]
 
 
@@ -76,8 +77,13 @@ class EngineSession:
                  reset_device_stats: bool = True,
                  arena_capacity_bytes: int = 256 << 20,
                  arena_ring: int = 2,
+                 dispatch: str = "leased",
                  name: str = "session"):
         scheduler_spec(scheduler)            # fail fast on unknown names
+        if dispatch not in ("leased", "per_packet"):
+            raise ValueError(f"dispatch must be 'leased' or 'per_packet', "
+                             f"got {dispatch!r}")
+        self.dispatch = dispatch
         self.device_policy = device_policy or DevicePolicy()
         self._devices: List[DeviceGroup] = \
             self.device_policy.resolve(devices)
@@ -255,7 +261,8 @@ class EngineSession:
                cache: bool = True,
                region: Optional[Region] = None,
                mode: Optional[OffloadMode] = None,
-               buffer_policy: Optional[BufferPolicy] = None) -> RunHandle:
+               buffer_policy: Optional[BufferPolicy] = None,
+               dispatch: Optional[str] = None) -> RunHandle:
         """Enqueue a program; returns a future-like RunHandle immediately.
 
         ``powers`` overrides the per-device computing powers for this run;
@@ -282,10 +289,20 @@ class EngineSession:
         result-lifetime contract: ``output`` is a recycled view, valid
         until the workload's ring cycles); everything else defaults to the
         session policy.
+
+        ``dispatch`` overrides the session's scheduler hand-off mode for
+        this run: ``"leased"`` (default — lease-amortized packet plans
+        with the scheduler's adaptive ``lease``/``acquire`` path) or
+        ``"per_packet"`` (one lock crossing per packet, the measurable
+        baseline).
         """
         program.validate()
         if scheduler is not None:
             scheduler_spec(scheduler)        # fail fast, not in dispatcher
+        if dispatch is not None and dispatch not in ("leased", "per_packet"):
+            raise ValueError(
+                f"{program.name}: dispatch must be 'leased' or "
+                f"'per_packet', got {dispatch!r}")
         if mode is OffloadMode.ROI:
             with self._lock:
                 registered = self._workloads.get(program.name)
@@ -345,7 +362,8 @@ class EngineSession:
             scheduler_kwargs=skw,
             cache=cache, collect=collect,
             region=region, mode=mode,
-            buffer_policy=buffer_policy)
+            buffer_policy=buffer_policy,
+            dispatch=dispatch)
         with self._cv:
             if self._closing:
                 raise RuntimeError(f"session {self.name!r} is closed")
@@ -411,7 +429,8 @@ class EngineSession:
             reset_device_stats=self.reset_device_stats,
             powers=sub.powers,
             collect=sub.collect,
-            region=sub.region)
+            region=sub.region,
+            dispatch=sub.dispatch or self.dispatch)
         result = ctx.execute()
         if sub.mode is OffloadMode.BINARY:
             # the binary contract tears down per submit: evict anything

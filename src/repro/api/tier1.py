@@ -26,7 +26,8 @@ def coexec(program: Program,
            device_policy: Optional[DevicePolicy] = None,
            parallel_init: bool = True,
            init_cost_s: float = 0.0,
-           region: Optional[Region] = None) -> RunResult:
+           region: Optional[Region] = None,
+           dispatch: str = "leased") -> RunResult:
     """Co-execute ``program`` across ``devices`` and return its RunResult.
 
     ``devices=None`` discovers the fleet via ``device_policy`` (default:
@@ -35,6 +36,9 @@ def coexec(program: Program,
     ``region`` restricts the one-shot run to a sub-NDRange of the program
     (lws-aligned per dimension); for *repeated* ROI offloads hold an
     ``EngineSession`` and use ``register_workload`` + ROI-mode submits.
+    ``dispatch`` selects the scheduler hand-off: ``"leased"`` (default,
+    lock-amortized packet plans) or ``"per_packet"`` (the classic
+    one-lock-per-packet baseline).
     """
     with EngineSession(devices,
                        scheduler=scheduler,
@@ -43,6 +47,7 @@ def coexec(program: Program,
                        device_policy=device_policy,
                        parallel_init=parallel_init,
                        init_cost_s=init_cost_s,
+                       dispatch=dispatch,
                        name=f"coexec[{program.name}]") as session:
         return session.submit(program, powers=powers,
                               region=region).result()

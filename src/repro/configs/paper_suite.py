@@ -126,7 +126,9 @@ def sim_devices(bench: BenchSpec) -> List[SimDevice]:
     return devs
 
 
-# The seven scheduling configurations of Fig. 3/4.
+# The paper's seven scheduling configurations of Fig. 3/4, plus the
+# repo's new load-balancing algorithm (lease-amortized dispatch with a
+# work-stealing tail).
 SCHED_CONFIGS: List[Tuple[str, str, Dict]] = [
     ("Static", "static", {}),
     ("Static rev", "static_rev", {}),
@@ -135,4 +137,12 @@ SCHED_CONFIGS: List[Tuple[str, str, Dict]] = [
     ("Dyn 512", "dynamic", {"n_packets": 512}),
     ("HGuided", "hguided", {}),
     ("HGuided opt", "hguided_opt", {}),
+    ("HGuided steal", "hguided_steal", {}),
 ]
+
+
+def dispatch_for(sched: str) -> str:
+    """The hand-off mode a scheduler is evaluated under: hguided_steal's
+    contract IS leased dispatch (lease + steal refills); everything else
+    keeps the calibrated per-packet hand-off the paper measured."""
+    return "leased" if sched == "hguided_steal" else "per_packet"

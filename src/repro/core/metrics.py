@@ -11,7 +11,7 @@
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
 
@@ -80,6 +80,9 @@ class RunResult:
     aborted_devices: int = 0
     retries: int = 0                    # packets re-issued after a requeue
     phases: Optional[PhaseBreakdown] = None  # per-phase wall-clock
+    # per-device time blocked on the scheduler hand-off (lock waits +
+    # carves + steals); empty when the engine predates the lease API
+    sched_wait_s: List[float] = field(default_factory=list)
 
     def __post_init__(self):
         if not self.retries:

@@ -49,6 +49,17 @@ and per-dimension lws alignment before dispatch.
 Fault tolerance: a device thread that raises (or whose DeviceGroup is
 marked dead) has its in-flight packet requeued with provenance preserved
 (same ``seq``, ``retried=True``); remaining devices absorb the work.
+
+Dispatch modes: ``dispatch="leased"`` (default) pulls packets through the
+scheduler's lease API — one global lock crossing buys a whole per-device
+packet plan, and device threads pop their local lease uncontended.
+``dispatch="per_packet"`` is the classic one-lock-per-packet hand-off,
+kept as the measurable baseline (``benchmarks/sched_overhead.py``).
+Either way the run stamps ``RunResult.sched_wait_s`` — per-device wall
+time blocked on the scheduler hand-off (lock waits, carves, steals).
+The exactly-once drain test is the scheduler's own ``drained()``
+protocol (acquire/release claims + a retry-epoch check), so the engine
+no longer serializes every pull through a run-global lock.
 """
 from __future__ import annotations
 
@@ -278,11 +289,17 @@ class _RunContext:
                  reset_device_stats: bool = True,
                  powers: Optional[List[float]] = None,
                  collect: Optional[Callable] = None,
-                 region: Optional[Region] = None):
+                 region: Optional[Region] = None,
+                 dispatch: str = "leased"):
         self.program = program
         self.devices = list(devices)
         if not self.devices:
             raise RuntimeError(f"{program.name}: no devices to dispatch to")
+        if dispatch not in ("leased", "per_packet"):
+            raise ValueError(
+                f"{program.name}: dispatch must be 'leased' or "
+                f"'per_packet', got {dispatch!r}")
+        self.dispatch = dispatch
         self.scheduler_name = scheduler
         self.scheduler_kwargs = dict(scheduler_kwargs)
         self.compile_fn = compile_fn
@@ -352,11 +369,13 @@ class _RunContext:
                                   (self.powers[i] if self.powers else
                                    (d.throughput or 1.0 / d.throttle)))
                     for i, d in enumerate(self.devices)]
-        executed: List = []
+        # per-device commit logs: appended only by the owning device
+        # thread (or the committer draining that device's stage-outs), so
+        # the dispatch hot path never crosses a run-global lock
+        executed_by: List[List] = [[] for _ in range(n)]
         errors: List[BaseException] = []
-        exec_lock = threading.Lock()
-        state: Dict[str, Any] = {"sched": None, "inflight": 0,
-                                 "commit_failed": 0}
+        exec_lock = threading.Lock()      # rare paths: errors, collect
+        state: Dict[str, Any] = {"sched": None, "commit_failed": 0}
         ready = threading.Barrier(n + 1)
         compiled_ev = threading.Event()
         fns: List[Optional[Callable]] = [None] * n
@@ -373,14 +392,19 @@ class _RunContext:
                 compiled_ev.wait()
                 clock.mark_once("roi")
 
+        def pull(i: int) -> Any:
+            """The dispatch hot path: leased (local-lease pop, amortized
+            lock) or per-packet (the classic hand-off baseline)."""
+            sched = sched_of(i)
+            if self.dispatch == "leased":
+                return sched.acquire(i)
+            return sched.next_packet(i)
+
         def fetch_and_stage(i: int, fn: Callable):
             """Stage-in for device ``i``: pull the next packet and bind its
             launch (the H2D window's host work)."""
             t0 = time.perf_counter()
-            with exec_lock:
-                pkt = sched_of(i).next_packet(i)
-                if pkt is not None:
-                    state["inflight"] += 1
+            pkt = pull(i)
             if pkt is None:
                 return None
             try:
@@ -388,9 +412,10 @@ class _RunContext:
                     else run_region.row_panel(pkt.offset, pkt.size)
                 call = self._invoke(fn, pkt_region)
             except BaseException:
-                with exec_lock:
-                    sched_of(i).requeue(pkt)
-                    state["inflight"] -= 1
+                # requeue BEFORE release: the packet must never be
+                # invisible to the drained() protocol
+                sched_of(i).requeue(pkt)
+                sched_of(i).release(i)
                 raise
             if pipe is not None:
                 pipe.note_h2d(time.perf_counter() - t0)
@@ -399,15 +424,14 @@ class _RunContext:
         def sched_of(i: int) -> SchedulerBase:
             return state["sched"]
 
-        def make_commit(pkt, res):
+        def make_commit(i, pkt, res):
             def commit():
                 try:
                     r0 = pkt.offset * prog.out_rows_per_wg
                     r1 = (pkt.offset + pkt.size) * prog.out_rows_per_wg
                     output[r0:r1] = np.asarray(res).reshape(r1 - r0,
                                                             out_cols)
-                    with exec_lock:
-                        executed.append(("pkt", pkt))
+                    executed_by[i].append(("pkt", pkt))
                 except Exception as e:
                     # host-side commit failure is fatal for the run: the
                     # packet was accounted done at stage-out, so the drain
@@ -420,13 +444,13 @@ class _RunContext:
         def abort_pipelined(i, pkt, err):
             """Requeue the in-flight packet and release the device (same
             provenance rules as the sync path)."""
-            with exec_lock:
-                if err is not None:
+            if err is not None:
+                with exec_lock:
                     errors.append(err)
-                sched = sched_of(i)
-                sched.requeue(pkt)
-                state["inflight"] -= 1
-                sched.mark_dead(i)
+            sched = sched_of(i)
+            sched.requeue(pkt)
+            sched.mark_dead(i)
+            sched.release(i)
 
         def device_loop_sync(i: int, dev: DeviceGroup, fn: Callable,
                              sched: SchedulerBase):
@@ -442,21 +466,21 @@ class _RunContext:
             if stage_bytes > 0:
                 in_src = np.empty(stage_bytes, np.uint8)
                 in_scratch = np.empty(stage_bytes, np.uint8)
+            my_done = executed_by[i]
             while True:
                 mark_roi()
-                with exec_lock:
-                    pkt = sched.next_packet(i)
-                    if pkt is not None:
-                        state["inflight"] += 1
+                pkt = pull(i)
                 if pkt is None:
-                    # another device may still fail and requeue its packet:
-                    # only exit once nothing is in flight anywhere
-                    with exec_lock:
-                        drained = (state["inflight"] == 0
-                                   and sched.remaining() == 0)
-                        alive_others = any(not d.dead for j, d in
-                                           enumerate(self.devices) if j != i)
-                    if drained or not alive_others:
+                    # another device may still fail and requeue its
+                    # packet: only exit once the scheduler's drain
+                    # protocol says nothing is in flight anywhere
+                    # (remaining + acquired-but-unreleased claims + the
+                    # retry-epoch re-check).  A dying peer keeps its
+                    # claim until after it has requeued its packet and
+                    # mark_dead has reclaimed its lease, so drained()
+                    # stays False for exactly as long as recoverable
+                    # work can still appear.
+                    if sched.drained():
                         break
                     time.sleep(1e-3)
                     continue
@@ -468,10 +492,9 @@ class _RunContext:
                     res, wg_s = dev.run_packet(self._invoke(fn, pkt_region),
                                                pkt.offset, pkt.size)
                 except DeviceFailure:
-                    with exec_lock:
-                        sched.requeue(pkt)
-                        sched.mark_dead(i)
-                        state["inflight"] -= 1
+                    sched.requeue(pkt)
+                    sched.mark_dead(i)
+                    sched.release(i)
                     break
                 except Exception as e:
                     # unexpected executor error: same fault-tolerance path as
@@ -480,18 +503,19 @@ class _RunContext:
                     dev.dead = True
                     with exec_lock:
                         errors.append(e)
-                        sched.requeue(pkt)
-                        sched.mark_dead(i)
-                        state["inflight"] -= 1
+                    sched.requeue(pkt)
+                    sched.mark_dead(i)
+                    sched.release(i)
                     break
                 try:
+                    sched.note_packet_latency(i, pkt.size / max(wg_s, 1e-9))
                     if hasattr(sched, "observe"):
                         sched.observe(i, wg_s)
                     if self.collect is not None:
                         with exec_lock:
                             self.collect(pkt, res, dev)
-                            executed.append(("pkt", pkt))
-                            state["inflight"] -= 1
+                        my_done.append(("pkt", pkt))
+                        sched.release(i)
                         continue
                     r0 = pkt.offset * prog.out_rows_per_wg
                     r1 = (pkt.offset + pkt.size) * prog.out_rows_per_wg
@@ -499,12 +523,10 @@ class _RunContext:
                     if self.registered_buffers:
                         output[r0:r1] = res           # in-place commit
                     else:
-                        with exec_lock:
-                            executed.append(("copy", r0, r1,
-                                             np.array(res, copy=True)))
-                    with exec_lock:
-                        executed.append(("pkt", pkt))
-                        state["inflight"] -= 1
+                        my_done.append(("copy", r0, r1,
+                                        np.array(res, copy=True)))
+                    my_done.append(("pkt", pkt))
+                    sched.release(i)
                 except Exception as e:
                     # commit-path failure (mis-shaped result, collect hook,
                     # observe): must release the in-flight packet and mark
@@ -512,9 +534,9 @@ class _RunContext:
                     dev.dead = True
                     with exec_lock:
                         errors.append(e)
-                        sched.requeue(pkt)
-                        sched.mark_dead(i)
-                        state["inflight"] -= 1
+                    sched.requeue(pkt)
+                    sched.mark_dead(i)
+                    sched.release(i)
                     break
 
         def device_loop_pipelined(i: int, dev: DeviceGroup, fn: Callable,
@@ -546,12 +568,8 @@ class _RunContext:
                 return
             while True:
                 if staged is None:
-                    with exec_lock:
-                        drained = (state["inflight"] == 0
-                                   and sched.remaining() == 0)
-                        alive_others = any(not d.dead for j, d in
-                                           enumerate(self.devices) if j != i)
-                    if drained or not alive_others:
+                    # same exit protocol as the sync loop
+                    if sched.drained():
                         break
                     time.sleep(1e-3)
                     try:
@@ -572,13 +590,13 @@ class _RunContext:
                     abort_pipelined(i, pkt, e)
                     break
                 try:
+                    sched.note_packet_latency(i, pkt.size / max(wg_s, 1e-9))
                     if hasattr(sched, "observe"):
                         sched.observe(i, wg_s)
                     nbytes = (pkt.size * prog.out_rows_per_wg * out_cols
                               * itemsize)
-                    pipe.stage_out(make_commit(pkt, res), nbytes)
-                    with exec_lock:
-                        state["inflight"] -= 1
+                    pipe.stage_out(make_commit(i, pkt, res), nbytes)
+                    sched.release(i)
                 except Exception as e:
                     dev.dead = True
                     abort_pipelined(i, pkt, e)
@@ -682,12 +700,14 @@ class _RunContext:
                 raise err
             if self.collect is None and not self.registered_buffers:
                 # assemble results from per-packet copies (bulk copy at end)
-                for item in executed:
-                    if item[0] == "copy":
-                        _, r0, r1, arr = item
-                        output[r0:r1] = arr
+                for done in executed_by:
+                    for item in done:
+                        if item[0] == "copy":
+                            _, r0, r1, arr = item
+                            output[r0:r1] = arr
             clock.mark("assembled")
-            packets = [it[1] for it in executed if it[0] == "pkt"]
+            packets = [it[1] for done in executed_by for it in done
+                       if it[0] == "pkt"]
             clock.mark("end")
         finally:
             if pipe is not None:
@@ -709,6 +729,7 @@ class _RunContext:
             binary_time=clock.between("start", "end"),
             aborted_devices=sum(1 for d in self.devices if d.dead),
             phases=phases,
+            sched_wait_s=state["sched"].sched_wait_s(),
         )
         result.output = output  # type: ignore[attr-defined]
         return result

@@ -30,19 +30,58 @@ still accepted everywhere and means the legacy 1-D region at offset 0.
   sizes are additionally capped by the tightest remaining deadline slack
   (``update_slack``), shrinking toward ``lws`` as deadlines close in.
 
+* ``HGuidedSteal``   — beyond-paper "new load balancing algorithm": a
+  deadline-capable HGuided that dispatches through *leased packet plans*
+  (see below) and lets an idle device steal half the largest victim lease
+  before falling back to the global carve, so the run tail stays balanced
+  without per-packet lock traffic.
+
 All schedulers are thread-safe (the paper's "atomic queue") and support
 ``requeue`` of in-flight packets for fault tolerance.
+
+Dispatch hot path — leases vs per-packet locking
+------------------------------------------------
+
+``next_packet`` is the paper's hand-off: one global lock acquisition per
+packet.  On an oversubscribed host every contended acquisition costs a
+thread wake (~200µs on the 2-core reference container) — for small tail
+packets that overhead rivals the compute itself.  The lease API amortizes
+it:
+
+* ``lease(device, k)`` carves up to ``k`` packets under ONE lock
+  acquisition into a per-device :class:`PacketLease` (a local deque owned
+  by the device thread; pops touch only the lease's own uncontended
+  lock).  ``k`` adapts per device: it starts at 1 and grows
+  geometrically while the device's observed packet latency (fed via
+  ``note_packet_latency``) is small against ``lease_overhead_s``, and
+  every lease is capped to half the device's fair share of the remaining
+  work so the tail stays balanced as ``remaining()`` falls.
+* ``acquire(device)`` is the device thread's hot path: pop the local
+  lease; when empty, refill via the scheduler's ``_refill`` hook
+  (``HGuidedSteal``: steal half the largest victim lease first, then the
+  global carve; everything else: global carve).
+* ``release(device)`` must be called once per acquired packet (after its
+  commit, or after its ``requeue``) — together with ``drained()`` this
+  gives engines a lock-free exactly-once drain test: work is continuously
+  visible in ``remaining() + outstanding`` from carve to commit, and a
+  retry epoch counter invalidates the check if a requeue raced it.
+* leased-but-unexecuted packets still count as outstanding work:
+  ``remaining()`` includes lease contents, and ``mark_dead`` drains a
+  dead device's lease back into the retry queue (FIFO, oldest first) so
+  the exact-cover invariant survives steals, leases and deaths.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import inspect
 import math
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
-                    Tuple, Union)
+from typing import (Callable, Deque, Dict, Iterable, List, Mapping,
+                    Optional, Sequence, Tuple, Union)
 
 from repro.core.region import Region, as_region
 
@@ -72,7 +111,77 @@ class DeviceProfile:
     k: float = 2.0               # k_i decay constant
 
 
+@dataclass
+class SchedStats:
+    """Dispatch-path counters (exact in single-threaded use, e.g. the
+    simulator; best-effort under threads, where they are only read for
+    reporting)."""
+    lock_crossings: int = 0      # global-lock acquisitions on the hot path
+    next_packets: int = 0        # per-packet-lock hand-offs
+    leases: int = 0              # lease refills granted
+    leased_packets: int = 0      # packets handed out through leases
+    local_pops: int = 0          # packets popped from a local lease
+    steals: int = 0              # successful steal operations
+    stolen_packets: int = 0      # packets moved by steals
+
+
+class PacketLease:
+    """A device-local run of leased packets.
+
+    The owning device thread pops from the front; a thief takes the back
+    half.  All mutation is under the lease's own lock — uncontended on
+    the hot path (only steals and the owner ever touch it), so a pop
+    costs a few hundred nanoseconds instead of a contended global-lock
+    hand-off."""
+
+    __slots__ = ("device", "_dq", "_lock")
+
+    def __init__(self, device: int):
+        self.device = device
+        self._dq: Deque[Packet] = collections.deque()
+        self._lock = threading.Lock()
+
+    def popleft(self) -> Optional[Packet]:
+        with self._lock:
+            return self._dq.popleft() if self._dq else None
+
+    def extend(self, pkts: Iterable[Packet]) -> None:
+        with self._lock:
+            self._dq.extend(pkts)
+
+    def steal_half(self) -> List[Packet]:
+        """Remove and return the back half (newest-first order; empty if
+        the lease holds fewer than two packets — the owner always keeps
+        at least one)."""
+        with self._lock:
+            n = len(self._dq) // 2
+            return [self._dq.pop() for _ in range(n)]
+
+    def drain(self) -> List[Packet]:
+        with self._lock:
+            out = list(self._dq)
+            self._dq.clear()
+            return out
+
+    def __len__(self) -> int:
+        return len(self._dq)
+
+    @property
+    def work(self) -> int:
+        """Total leased work-groups (locked: exact)."""
+        with self._lock:
+            return sum(p.size for p in self._dq)
+
+
 class SchedulerBase:
+    # lease tuning (class attrs so plugins/tests can override): one global
+    # lock crossing is worth ~a contended thread wake on the reference
+    # container; leases grow until that cost is ≤ lease_overhead_frac of
+    # the lease's compute time (2%: over-leasing is cheap — the tail
+    # budget bounds it and steals rebalance it), never past lease_k_max
+    lease_overhead_s: float = 2e-4
+    lease_overhead_frac: float = 0.02
+    lease_k_max: int = 64
     def __init__(self, total_work: Union[int, Region], lws: int,
                  devices: Sequence[DeviceProfile]):
         """``total_work`` is a Region (NDRange) or a bare work-group count
@@ -86,32 +195,192 @@ class SchedulerBase:
         self._lock = threading.Lock()
         self._offset = 0
         self._seq = 0
-        self._retry: List[Packet] = []
+        # retry pool: FIFO (oldest requeued packet re-issues first), so a
+        # straggler's early packet cannot be starved behind later requeues
+        self._retry: Deque[Packet] = collections.deque()
+        n = len(self.devices)
+        self._leases: List[PacketLease] = [PacketLease(i) for i in range(n)]
+        self._lease_k: List[int] = [1] * n        # adaptive lease size
+        self._lease_lat: List[Optional[float]] = [None] * n
+        self._outstanding: List[int] = [0] * n    # acquired, not released
+        self._wait_s: List[float] = [0.0] * n     # time in dispatch calls
+        self._retry_epoch = 0                     # bumped on every requeue
+        self.stats = SchedStats()
 
     # -- public ------------------------------------------------------------
     def next_packet(self, device: int) -> Optional[Packet]:
-        with self._lock:
-            if self._retry:
-                pkt = self._retry.pop()
-                return dataclasses.replace(pkt, device=device, retried=True)
-            return self._carve(device)
+        """Per-packet hand-off: ONE global lock acquisition per packet
+        (the paper's atomic queue; the baseline the lease API beats)."""
+        t0 = time.perf_counter()
+        try:
+            with self._lock:
+                self.stats.lock_crossings += 1
+                self.stats.next_packets += 1
+                self._outstanding[device] += 1
+                pkt = self._pop_retry_locked(device)
+                if pkt is None:
+                    pkt = self._carve(device)
+                if pkt is None:
+                    self._outstanding[device] -= 1
+                return pkt
+        finally:
+            self._wait_s[device] += time.perf_counter() - t0
+
+    def acquire(self, device: int) -> Optional[Packet]:
+        """Leased hot path: pop the device's local lease (uncontended);
+        when empty, refill through ``_refill`` (one global crossing for a
+        whole packet plan).  Pair every non-None return with one
+        ``release(device)`` call after the packet commits or requeues."""
+        while True:
+            pkt = self._pop_local(device)
+            if pkt is not None:
+                return pkt
+            if not self._refill(device):
+                return None
+
+    def release(self, device: int) -> None:
+        """Account a previously acquired packet as done (committed or
+        requeued).  Owner-thread only; pairs with next_packet/acquire."""
+        self._outstanding[device] -= 1
+
+    def lease(self, device: int, k: Optional[int] = None) -> int:
+        """Refill ``device``'s local lease under ONE lock acquisition.
+
+        Drains the retry pool FIFO first, then carves fresh packets, up
+        to ``k`` packets (``None`` = adaptive) — but never more work than
+        half the device's fair share of what remains, so leases shrink
+        with the tail.  Returns the number of packets leased."""
+        t0 = time.perf_counter()
+        granted: List[Packet] = []
+        try:
+            with self._lock:
+                self.stats.lock_crossings += 1
+                if k is None:
+                    k = self._adaptive_k_locked(device)
+                k = max(1, int(k))
+                # tail budget: never lease more than HALF the device's
+                # power-proportional fair share of remaining() (uncarved
+                # pool + retries + work already leased anywhere) — a
+                # slow device must not hoard packets the fast ones will
+                # be idle for (steals recover the rest, where available)
+                left = self._remaining_locked()
+                d = self.devices[device]
+                total_p = sum(x.power for x in self.devices) or 1.0
+                budget = max(self.lws,
+                             int(left * d.power / (2.0 * total_p)))
+                work = 0
+                while len(granted) < k and work < budget:
+                    pkt = self._pop_retry_locked(device)
+                    if pkt is None:
+                        pkt = self._carve(device)
+                    if pkt is None:
+                        break
+                    granted.append(pkt)
+                    work += pkt.size
+                if granted:
+                    self.stats.leases += 1
+                    self.stats.leased_packets += len(granted)
+                    self._leases[device].extend(granted)
+            return len(granted)
+        finally:
+            self._wait_s[device] += time.perf_counter() - t0
+
+    def steal(self, thief: int) -> int:
+        """Move the back half of the largest victim lease onto ``thief``'s
+        lease (packets re-stamped to the thief, provenance preserved).
+        Returns the number of packets stolen.  Available on every
+        scheduler; ``HGuidedSteal`` wires it into its refill path."""
+        t0 = time.perf_counter()
+        try:
+            with self._lock:
+                self.stats.lock_crossings += 1
+                victim = None
+                best = 0
+                for i, lease in enumerate(self._leases):
+                    if i == thief:
+                        continue
+                    w = lease.work
+                    if w > best:
+                        best, victim = w, lease
+                if victim is None:
+                    return 0
+                stolen = victim.steal_half()
+                if not stolen:
+                    return 0
+                stolen.reverse()          # back half, restored to FIFO order
+                self._leases[thief].extend(
+                    dataclasses.replace(p, device=thief) for p in stolen)
+                self.stats.steals += 1
+                self.stats.stolen_packets += len(stolen)
+                return len(stolen)
+        finally:
+            self._wait_s[thief] += time.perf_counter() - t0
+
+    def note_packet_latency(self, device: int, seconds: float) -> None:
+        """Feed the device's observed per-packet wall latency — this is
+        what grows/shrinks its adaptive lease size.  Owner-thread only."""
+        if seconds > 0:
+            prev = self._lease_lat[device]
+            self._lease_lat[device] = seconds if prev is None \
+                else 0.5 * seconds + 0.5 * prev
 
     def requeue(self, pkt: Packet) -> None:
         """Return an in-flight packet to the queue (device failure)."""
         with self._lock:
-            self._retry.append(pkt)
+            self._requeue_locked(pkt)
 
     def mark_dead(self, device: int) -> None:
-        """Notify that a device died.  Pool-carving schedulers need do
-        nothing (survivors drain the shared queue), but pre-assignment
-        schedulers (Static*) must release the dead device's unclaimed
-        chunk back to the queue — otherwise that work is stranded and the
-        run can never drain."""
+        """Notify that a device died: its leased-but-unexecuted packets
+        re-enter the retry pool (preserving the exact-cover invariant),
+        and pre-assignment schedulers additionally release the dead
+        device's unclaimed chunk via ``_release_dead_locked`` — otherwise
+        that work is stranded and the run can never drain."""
+        with self._lock:
+            for pkt in self._leases[device].drain():
+                self._requeue_locked(pkt)
+            self._release_dead_locked(device)
 
     def remaining(self) -> int:
+        """Outstanding work-groups still owned by the scheduler: uncarved
+        pool + retry queue + leased-but-unexecuted packets.  (Leases
+        count: serving admission and deadline slack caps must see work a
+        device has planned but not run.)"""
         with self._lock:
-            return (self.G - self._offset
-                    + sum(p.size for p in self._retry))
+            return self._remaining_locked()
+
+    def _remaining_locked(self) -> int:
+        """remaining() under the held lock — subclasses with different
+        pool accounting (Static*) override this ONE place; lease()'s
+        tail budget uses it too."""
+        return (self.G - self._offset
+                + sum(p.size for p in self._retry)
+                + sum(lease.work for lease in self._leases))
+
+    def outstanding(self) -> int:
+        """Packets handed out via next_packet/acquire and not yet
+        released (approximate under concurrent mutation)."""
+        return sum(self._outstanding)
+
+    def drained(self) -> bool:
+        """Lock-free exactly-once drain test for engines.
+
+        Sound because (a) a packet is continuously visible in
+        ``remaining()`` until it is popped, and in ``outstanding`` from
+        *before* that pop until its ``release`` (which follows its commit
+        or its requeue), and (b) the only transition that re-adds work —
+        a requeue — bumps ``_retry_epoch``, so the re-read detects any
+        race that could hide a packet between the two reads."""
+        e0 = self._retry_epoch
+        if self.remaining() != 0:
+            return False
+        if sum(self._outstanding) != 0:
+            return False
+        return self._retry_epoch == e0
+
+    def sched_wait_s(self) -> List[float]:
+        """Per-device wall time spent inside dispatch-path scheduler
+        calls (next_packet / lease / steal): lock waits + carve work."""
+        return list(self._wait_s)
 
     def update_power(self, device: int, power: float) -> None:
         """Online power re-estimation hook (HGuidedOpt uses it)."""
@@ -119,6 +388,57 @@ class SchedulerBase:
             self.devices[device].power = max(power, 1e-9)
 
     # -- internals ----------------------------------------------------------
+    def _pop_retry_locked(self, device: int) -> Optional[Packet]:
+        """FIFO retry re-issue: the OLDEST requeued packet goes out first
+        (LIFO would re-issue a straggler's early packet last, extending
+        the tail).  Provenance: original seq, retried=True."""
+        if not self._retry:
+            return None
+        pkt = self._retry.popleft()
+        return dataclasses.replace(pkt, device=device, retried=True)
+
+    def _requeue_locked(self, pkt: Packet) -> None:
+        self._retry.append(pkt)
+        self._retry_epoch += 1
+
+    def _pop_local(self, device: int) -> Optional[Packet]:
+        """Pop the device's lease.  The outstanding claim is taken BEFORE
+        the packet leaves the lease, so the packet is never invisible to
+        ``drained()`` readers (remaining first, outstanding second)."""
+        lease = self._leases[device]
+        with lease._lock:
+            if not lease._dq:
+                return None
+            self._outstanding[device] += 1
+            pkt = lease._dq.popleft()
+        self.stats.local_pops += 1
+        return pkt
+
+    def _refill(self, device: int) -> int:
+        """Hook: pull new work into the device's lease; returns packets
+        gained.  Base: global carve.  HGuidedSteal: steal first."""
+        return self.lease(device)
+
+    def _adaptive_k_locked(self, device: int) -> int:
+        """Grow the lease geometrically while one lock crossing costs
+        more than ``lease_overhead_frac`` of the lease's compute time;
+        shrink it when packets are slow (balance beats amortization)."""
+        k = self._lease_k[device]
+        lat = self._lease_lat[device]
+        if lat is not None and lat > 0:
+            target = self.lease_overhead_s / (self.lease_overhead_frac * lat)
+            if k < target:
+                k = min(k * 2, self.lease_k_max)
+            elif k > 2 * target:
+                k = max(1, k // 2)
+        self._lease_k[device] = k
+        return k
+
+    def _release_dead_locked(self, device: int) -> None:
+        """Hook: pre-assignment schedulers (Static*) release a dead
+        device's unclaimed chunk here.  Pool-carving schedulers need do
+        nothing (survivors drain the shared queue)."""
+
     def _bump(self) -> int:
         self._seq += 1
         return self._seq - 1
@@ -191,23 +511,22 @@ class StaticScheduler(SchedulerBase):
         self._given[device] = True
         return self._packet(off, min(size, self.G - off), device)
 
-    def mark_dead(self, device: int) -> None:
+    def _release_dead_locked(self, device: int) -> None:
         # a dead device's unclaimed pre-assigned chunk is released to the
         # retry queue so survivors can absorb it (it would strand otherwise:
         # _carve only hands a chunk to its owner)
-        with self._lock:
-            if self._given.get(device):
-                return
-            self._given[device] = True
-            off, size = self._chunk_bounds(device)
-            size = min(size, self.G - off)
-            if size > 0 and off < self.G:
-                self._retry.append(self._packet(off, size, device))
+        if self._given.get(device):
+            return
+        self._given[device] = True
+        off, size = self._chunk_bounds(device)
+        size = min(size, self.G - off)
+        if size > 0 and off < self.G:
+            self._requeue_locked(self._packet(off, size, device))
 
-    def remaining(self) -> int:  # static: everything is pre-assigned
-        with self._lock:
-            done = sum(self._sizes[d] for d, g in self._given.items() if g)
-            return self.G - done + sum(p.size for p in self._retry)
+    def _remaining_locked(self) -> int:  # static: all work pre-assigned
+        done = sum(self._sizes[d] for d, g in self._given.items() if g)
+        return (self.G - done + sum(p.size for p in self._retry)
+                + sum(lease.work for lease in self._leases))
 
 
 class DynamicScheduler(SchedulerBase):
@@ -350,6 +669,32 @@ class HGuidedDeadlineScheduler(HGuidedOptScheduler):
         return min(size, cap)
 
 
+class HGuidedStealScheduler(HGuidedDeadlineScheduler):
+    """The repo's new load-balancing algorithm: lease-amortized HGuided
+    dispatch with a work-stealing tail.
+
+    Carving law = HGuidedDeadline (tuned (m, k) pairs, online EWMA
+    powers, optional slack cap — with ``slack_s=None`` it sizes packets
+    exactly like HGuidedOpt).  What changes is the *hand-off*: devices
+    dispatch through ``acquire()`` (leased packet plans, one global lock
+    crossing per plan), and an idle device first drains its own lease,
+    then **steals half the largest victim lease**, and only then falls
+    back to the global carve.  Stealing keeps every device busy through
+    the run tail — the stolen packets are exactly the ones a loaded
+    device had planned but not started — while the lease amortization
+    removes the per-packet lock hand-off the paper's management-overhead
+    accounting charges against co-execution."""
+
+    def _refill(self, device: int) -> int:
+        # cheap unlocked peek (len() is GIL-atomic): only pay the steal's
+        # lock crossing when some victim lease is plausibly non-empty
+        if any(len(lease) for i, lease in enumerate(self._leases)
+               if i != device):
+            if self.steal(device):
+                return 1
+        return self.lease(device)
+
+
 # ---------------------------------------------------------------- registry
 @dataclass(frozen=True)
 class SchedulerSpec:
@@ -444,6 +789,7 @@ register_scheduler("dynamic", DynamicScheduler)
 register_scheduler("hguided", HGuidedScheduler)
 register_scheduler("hguided_opt", HGuidedOptScheduler)
 register_scheduler("hguided_deadline", HGuidedDeadlineScheduler)
+register_scheduler("hguided_steal", HGuidedStealScheduler)
 
 
 def rotate_static_order(name: str, n_devices: int,

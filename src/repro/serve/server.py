@@ -58,6 +58,10 @@ class ServerConfig:
     batch_window_s: float = 0.0   # micro-batching: wait for round to fill
     round_quantum_s: float = float("inf")  # max EDF-first work per round
     warmup: bool = True           # pre-compile before starting the clock
+    # scheduler hand-off for dispatch rounds: "leased" (lock-amortized
+    # packet plans; with scheduler="hguided_steal" idle replicas also
+    # steal from the largest victim lease) or "per_packet" (baseline)
+    dispatch: str = "leased"
 
 
 def _no_collect(pkt, res, dev) -> None:
@@ -94,7 +98,8 @@ class CoexecServer:
         self._by_name = {r.name: r for r in self.replicas}
         self.session = EngineSession(
             [DeviceGroup(r.name) for r in self.replicas],
-            scheduler=cfg.scheduler, name="coexec_server")
+            scheduler=cfg.scheduler, dispatch=cfg.dispatch,
+            name="coexec_server")
 
     # -- admission -----------------------------------------------------------
     def _admit(self, pending: List[Request], now: float,

@@ -1,0 +1,155 @@
+"""Lease-amortized dispatch through the threaded engine + simulator.
+
+Satellite coverage for the lock-amortized hand-off PR: both dispatch
+modes stay bit-exact on every scheduler (including the new
+``hguided_steal``), the per-device ``sched_wait_s`` metric is stamped
+with the phase identity intact, fault tolerance survives leased
+dispatch, and the simulator's lease model reproduces the crossover.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (BufferPolicy, EngineSession, OffloadMode, coexec)
+from repro.core import programs as P
+from repro.core.device import DeviceGroup
+from repro.core.simulate import SimConfig, SimDevice, simulate
+
+MANDEL_KW = dict(px=64, max_iter=16, lws=(4, 4))
+GAUSS_KW = dict(h=64, w=64, lws=(4, 4))
+
+
+def devices3():
+    return [DeviceGroup("cpu", throttle=3.0),
+            DeviceGroup("igpu", throttle=2.0),
+            DeviceGroup("gpu", throttle=1.0)]
+
+
+# ------------------------------------------------------------- exactness
+
+@pytest.mark.parametrize("dispatch", ["leased", "per_packet"])
+@pytest.mark.parametrize("scheduler", ["dynamic", "hguided_opt",
+                                       "hguided_steal"])
+def test_dispatch_modes_bit_identical(scheduler, dispatch):
+    ref = P.reference_output("mandelbrot2d", **MANDEL_KW)
+    res = coexec(P.PROGRAMS["mandelbrot2d"](**MANDEL_KW), devices3(),
+                 scheduler=scheduler, dispatch=dispatch)
+    np.testing.assert_array_equal(res.output, ref)
+
+
+def test_steal_scheduler_pooled_output_exact():
+    ref = P.reference_output("gaussian2d", **GAUSS_KW)
+    res = coexec(P.PROGRAMS["gaussian2d"](**GAUSS_KW), devices3(),
+                 scheduler="hguided_steal",
+                 buffer_policy=BufferPolicy.POOLED)
+    np.testing.assert_allclose(res.output, ref, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- sched_wait_s + phases
+
+@pytest.mark.parametrize("dispatch", ["leased", "per_packet"])
+def test_sched_wait_stamped_and_phase_identity(dispatch):
+    res = coexec(P.PROGRAMS["gaussian2d"](**GAUSS_KW), devices3(),
+                 scheduler="hguided_steal", dispatch=dispatch)
+    assert len(res.sched_wait_s) == 3
+    assert all(w >= 0.0 for w in res.sched_wait_s)
+    ph = res.phases
+    # the five disjoint windows still cover the wall exactly
+    total = (ph.init_s + ph.h2d_s + ph.roi_s + ph.d2h_s + ph.teardown_s)
+    assert total == pytest.approx(res.binary_time, abs=1e-9)
+    assert ph.offload_s == pytest.approx(ph.h2d_s + ph.roi_s + ph.d2h_s,
+                                         abs=1e-9)
+
+
+def test_session_dispatch_override_and_validation():
+    prog = P.PROGRAMS["gaussian2d"](**GAUSS_KW)
+    ref = P.reference_output("gaussian2d", **GAUSS_KW)
+    with pytest.raises(ValueError, match="dispatch"):
+        EngineSession(devices3(), dispatch="bogus")
+    with EngineSession(devices3(), dispatch="leased") as session:
+        with pytest.raises(ValueError, match="dispatch"):
+            session.submit(prog, dispatch="nope")
+        # per-submit override of the session default
+        r = session.submit(prog, dispatch="per_packet").result()
+        np.testing.assert_allclose(r.output, ref, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- fault tolerance
+
+def test_leased_dispatch_fault_tolerance_with_steal():
+    """A device dying mid-run under leased dispatch: its lease is
+    reclaimed, survivors absorb the work, output stays exact."""
+    ref = P.reference_output("mandelbrot2d", **MANDEL_KW)
+    devs = devices3()
+    devs[1].fail_after = 0            # dies holding its first packet
+    res = coexec(P.PROGRAMS["mandelbrot2d"](**MANDEL_KW), devs,
+                 scheduler="hguided_steal")
+    np.testing.assert_array_equal(res.output, ref)
+    assert res.aborted_devices == 1
+    assert res.retries >= 1
+
+
+def test_roi_submits_leased_dispatch_exact_with_faults():
+    prog = P.PROGRAMS["gaussian2d"](**GAUSS_KW)
+    ref = P.reference_output("gaussian2d", **GAUSS_KW)
+    devs = devices3()
+    devs[2].fail_after = 0
+    with EngineSession(devs, scheduler="hguided_steal") as session:
+        session.register_workload(prog)
+        r = session.submit(prog, mode=OffloadMode.ROI).result()
+        np.testing.assert_allclose(r.output, ref, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- simulator
+
+def test_sim_lease_model_crossover():
+    """The sim's leased hand-off must (a) match per-packet results when
+    every pop crosses the lock anyway, and (b) beat it at high packet
+    counts where per-packet serialization dominates."""
+    def devs():
+        return [SimDevice("gpu", 40000.0), SimDevice("gpu2", 15000.0),
+                SimDevice("cpu", 10000.0)]
+    gains = []
+    for n_pkt in (64, 512):
+        kw = {"n_packets": n_pkt}
+        lock = simulate(16384, 8, devs(),
+                        SimConfig(scheduler="dynamic", scheduler_kwargs=kw,
+                                  sched_overhead_s=1e-3))
+        lease = simulate(16384, 8, devs(),
+                         SimConfig(scheduler="dynamic", scheduler_kwargs=kw,
+                                   sched_overhead_s=1e-3,
+                                   dispatch="leased"))
+        assert len(lock.sched_wait_s) == 3
+        assert all(w >= 0 for w in lock.sched_wait_s)
+        assert sum(lease.sched_wait_s) <= sum(lock.sched_wait_s) + 1e-9
+        gains.append(1 - lease.total_time / lock.total_time)
+    assert gains[-1] > gains[0]               # crossover widens
+    assert gains[-1] > 0.05                   # and is material at 512
+
+
+def test_sim_per_packet_unchanged_by_lease_plumbing():
+    """Default SimConfig (per-packet) must stay bit-identical to the
+    calibrated behavior: same packets, same times, seeded jitter."""
+    devs = [SimDevice("a", 1000.0, jitter=0.1),
+            SimDevice("b", 400.0, jitter=0.1)]
+    r1 = simulate(4096, 8, devs, SimConfig(scheduler="hguided_opt", seed=3))
+    devs2 = [SimDevice("a", 1000.0, jitter=0.1),
+             SimDevice("b", 400.0, jitter=0.1)]
+    r2 = simulate(4096, 8, devs2, SimConfig(scheduler="hguided_opt", seed=3))
+    assert r1.total_time == r2.total_time
+    assert [p.seq for p in r1.packets] == [p.seq for p in r2.packets]
+
+
+def test_sim_steal_scheduler_serving_and_fault():
+    """hguided_steal under leased dispatch survives a mid-run device
+    death in the sim (lease reclaim + exact drain)."""
+    devs = [SimDevice("a", 1000.0), SimDevice("b", 800.0, fail_at=0.4),
+            SimDevice("c", 600.0)]
+    r = simulate(8192, 8, devs,
+                 SimConfig(scheduler="hguided_steal", dispatch="leased"))
+    assert r.aborted_devices == 1
+    covered = sorted((p.offset, p.offset + p.size) for p in r.packets)
+    pos = 0
+    for a, b in covered:
+        assert a == pos
+        pos = b
+    assert pos == 8192

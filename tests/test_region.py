@@ -14,7 +14,7 @@ from repro.core.scheduler import (DeviceProfile, available_schedulers,
                                   make_scheduler)
 
 ALL_SCHEDULERS = ["static", "static_rev", "dynamic", "hguided",
-                  "hguided_opt", "hguided_deadline"]
+                  "hguided_opt", "hguided_deadline", "hguided_steal"]
 
 
 # ------------------------------------------------------------- value types

@@ -12,7 +12,7 @@ from repro.core.scheduler import (DeviceProfile, DynamicScheduler,
                                   tuned_profiles)
 
 ALL_SCHEDULERS = ["static", "static_rev", "dynamic", "hguided",
-                  "hguided_opt", "hguided_deadline"]
+                  "hguided_opt", "hguided_deadline", "hguided_steal"]
 
 
 def drain(sched, n_dev):
@@ -240,6 +240,229 @@ def test_hguided_opt_fleet_scale_adaptation():
     assert all(d.min_mult == 1 for d in sched.devices)
 
 
+# ---------------------------------------------------------------- leases
+
+def test_retry_reissue_is_fifo():
+    """Regression: requeued packets must re-issue OLDEST FIRST — LIFO
+    draining re-issued a straggler's early packet last, extending the
+    tail."""
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 1.0)]
+    sched = DynamicScheduler(100, 1, devs, n_packets=10)
+    p1 = sched.next_packet(0)
+    p2 = sched.next_packet(0)
+    p3 = sched.next_packet(0)
+    sched.requeue(p1)
+    sched.requeue(p2)
+    sched.requeue(p3)
+    out = [sched.next_packet(1) for _ in range(3)]
+    assert [p.offset for p in out] == [p1.offset, p2.offset, p3.offset]
+    assert all(p.retried for p in out)
+    # the lease path drains retries in the same FIFO order
+    for p in out:
+        sched.requeue(p)
+    sched.lease(1, k=3)
+    leased = [sched.acquire(1) for _ in range(3)]
+    assert [p.offset for p in leased] == [p1.offset, p2.offset, p3.offset]
+    for _ in leased:
+        sched.release(1)
+
+
+@pytest.mark.parametrize("name", ALL_SCHEDULERS)
+def test_lease_counts_as_remaining(name):
+    """Leased-but-unexecuted packets are outstanding work: admission and
+    slack caps must see them (satellite invariant)."""
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 3.0)]
+    sched = make_scheduler(name, 1000, 8, devs)
+    before = sched.remaining()
+    assert before == 1000
+    got = sched.lease(0, k=4)
+    assert got >= 1
+    assert sched.remaining() == before          # leases still count
+    pkt = sched.acquire(0)
+    assert pkt is not None
+    assert sched.remaining() == before - pkt.size  # popped -> in flight
+    sched.release(0)
+
+
+@pytest.mark.parametrize("name", ALL_SCHEDULERS)
+def test_mark_dead_reclaims_leased_packets(name):
+    """A dead device's leased packets re-enter the retry pool; survivors
+    drain to exact cover."""
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 1.0),
+            DeviceProfile("c", 1.0)]
+    sched = make_scheduler(name, 1200, 8, devs)
+    sched.lease(1, k=6)
+    sched.lease(2, k=6)
+    sched.mark_dead(1)
+    sched.mark_dead(2)
+    executed = []
+    while True:
+        pkt = sched.acquire(0)
+        if pkt is None:
+            break
+        executed.append(pkt)
+        sched.release(0)
+    assert coverage_ok(executed, 1200)
+    assert sched.remaining() == 0
+    assert sched.drained()
+
+
+def test_lease_respects_explicit_k_and_adaptive_growth():
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 1.0)]
+    sched = DynamicScheduler(10000, 1, devs, n_packets=1000)
+    assert sched.lease(0, k=5) == 5
+    drained = [sched.acquire(0) for _ in range(5)]
+    assert all(p is not None for p in drained)
+    for _ in drained:
+        sched.release(0)
+    # adaptive: with fast packets the granted lease size must grow
+    # geometrically from 1 (one lock crossing buys a growing plan)
+    sizes = []
+    for _ in range(6):
+        sched.note_packet_latency(1, 1e-5)
+        got = sched.lease(1)
+        sizes.append(got)
+        for _ in range(got):
+            assert sched.acquire(1) is not None
+            sched.release(1)
+    assert sizes[0] <= 2            # first grant: k doubled at most once
+    assert sizes[-1] > sizes[0]
+    assert any(b > a for a, b in zip(sizes, sizes[1:]))
+
+
+def test_lease_tail_budget_shrinks():
+    """Near the tail a lease may not hoard: granted work is capped at
+    half the device's power-proportional share of what remains."""
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 1.0)]
+    sched = DynamicScheduler(64, 1, devs, n_packets=64)
+    sched.note_packet_latency(0, 1e-6)        # fast: k wants to explode
+    for _ in range(5):
+        sched.lease(0)
+        while sched.acquire(0) is not None:
+            sched.release(0)
+    # all work executed by device 0; each lease was budget-capped
+    assert sched.remaining() == 0
+
+
+def test_steal_takes_back_half_of_largest_victim():
+    # steal() is a SchedulerBase method (the property harness drives it
+    # on every scheduler); equal dynamic chunks make it deterministic
+    devs = [DeviceProfile(f"d{i}", 1.0) for i in range(3)]
+    sched = make_scheduler("dynamic", 4096, 1, devs, n_packets=64)
+    sched.lease(1, k=2)
+    sched.lease(2, k=8)                        # the largest victim
+    stolen = sched.steal(0)
+    assert stolen == 4                         # back half of 8
+    assert sched.stats.steals == 1
+    # stolen packets are re-stamped to the thief, keep their seq, and
+    # arrive in FIFO offset order
+    a = sched.acquire(0)
+    b = sched.acquire(0)
+    assert a.device == 0 and b.device == 0
+    assert a.offset < b.offset
+    sched.release(0)
+    sched.release(0)
+    assert sched.remaining() == 4096 - a.size - b.size
+
+
+def test_steal_never_empties_a_single_packet_lease():
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 1.0)]
+    sched = make_scheduler("hguided_steal", 1000, 8, devs)
+    assert sched.lease(1, k=1) == 1
+    assert sched.steal(0) == 0                 # owner keeps at least one
+
+
+def test_acquire_release_drained_protocol():
+    devs = [DeviceProfile("a", 1.0), DeviceProfile("b", 1.0)]
+    sched = DynamicScheduler(16, 1, devs, n_packets=2)
+    a = sched.acquire(0)
+    b = sched.acquire(1)
+    assert a is not None and b is not None
+    assert sched.remaining() == 0
+    assert not sched.drained()                 # both still in flight
+    sched.release(0)
+    assert not sched.drained()
+    sched.requeue(b)                           # device 1 fails its packet
+    sched.release(1)
+    assert not sched.drained()                 # retry re-entered the pool
+    c = sched.acquire(0)
+    assert c is not None and c.retried and c.seq == b.seq
+    sched.release(0)
+    assert sched.drained()
+    assert all(w >= 0 for w in sched.sched_wait_s())
+
+
+def _lease_fault_harness(sched, n_dev, ops):
+    """Drive random lease/steal/requeue/death ops, then drain; mirrors
+    the engine's acquire/release contract (device 0 is immortal)."""
+    executed = []
+    alive = set(range(n_dev))
+    for dev, action, k in ops:
+        i = dev % n_dev
+        if i not in alive:
+            continue
+        if action == 0:                        # leased pull + execute
+            pkt = sched.acquire(i)
+            if pkt is not None:
+                executed.append(pkt)
+                sched.note_packet_latency(i, 1e-5)
+                sched.release(i)
+        elif action == 1:                      # per-packet pull + execute
+            pkt = sched.next_packet(i)
+            if pkt is not None:
+                executed.append(pkt)
+                sched.release(i)
+        elif action == 2:                      # explicit lease plan
+            sched.lease(i, k)
+        elif action == 3:                      # steal from the largest
+            sched.steal(i)
+        elif action == 4:                      # transient failure
+            pkt = sched.acquire(i)
+            if pkt is not None:
+                sched.requeue(pkt)
+                sched.release(i)
+        elif action == 5 and i != 0:           # death holding a packet
+            pkt = sched.acquire(i)
+            if pkt is not None:
+                sched.requeue(pkt)
+                sched.release(i)
+            sched.mark_dead(i)
+            alive.discard(i)
+    while True:
+        progress = False
+        for i in sorted(alive):
+            pkt = sched.acquire(i)
+            if pkt is not None:
+                executed.append(pkt)
+                sched.release(i)
+                progress = True
+        if not progress:
+            return executed
+
+
+@given(total=st.integers(1, 4000), lws=st.integers(1, 32),
+       powers=st.lists(st.floats(0.05, 10.0), min_size=2, max_size=6),
+       name=st.sampled_from(ALL_SCHEDULERS),
+       ops=st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                              st.integers(1, 8)),
+                    min_size=0, max_size=40))
+@settings(max_examples=120, deadline=None)
+def test_property_lease_steal_fault_coverage(total, lws, powers, name, ops):
+    """Satellite property suite: random lease sizes, steals, requeues and
+    device deaths on EVERY registered scheduler still yield exact cover,
+    unique seqs, non-negative sched-wait accounting, and a drained
+    scheduler."""
+    devs = [DeviceProfile(f"d{i}", p) for i, p in enumerate(powers)]
+    sched = make_scheduler(name, total, lws, devs)
+    executed = _lease_fault_harness(sched, len(devs), ops)
+    assert coverage_ok(executed, total)
+    seqs = [p.seq for p in executed]
+    assert len(seqs) == len(set(seqs))
+    assert sched.remaining() == 0
+    assert sched.drained()
+    assert all(w >= 0 for w in sched.sched_wait_s())
+
+
 def test_thread_safety():
     devs = [DeviceProfile(f"d{i}", 1.0 + i) for i in range(4)]
     sched = HGuidedScheduler(20000, 4, devs)
@@ -260,3 +483,30 @@ def test_thread_safety():
     for t in threads:
         t.join()
     assert coverage_ok(got, 20000)
+
+
+def test_thread_safety_leased_acquire():
+    """Concurrent acquire/release (the leased hot path, with steals) on
+    the steal scheduler still covers exactly once."""
+    devs = [DeviceProfile(f"d{i}", 1.0 + i) for i in range(4)]
+    sched = make_scheduler("hguided_steal", 20000, 4, devs)
+    got = []
+    lock = threading.Lock()
+
+    def worker(i):
+        while True:
+            p = sched.acquire(i)
+            if p is None:
+                return
+            sched.note_packet_latency(i, 1e-5)
+            with lock:
+                got.append(p)
+            sched.release(i)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert coverage_ok(got, 20000)
+    assert sched.drained()

@@ -33,7 +33,12 @@ def test_claim_hguided_opt_is_best_scheduler():
             effs.append(M.efficiency(min(singles), sum(ts) / len(ts),
                                      singles))
         geo[label] = M.geomean(effs)
-    assert max(geo, key=geo.get) == "HGuided opt"
+    # the paper's claim is about ITS seven configurations; the
+    # beyond-paper HGuided steal (same carve law + leases/steals) may
+    # tie or beat it, so compare among the paper configs only
+    paper = {k: v for k, v in geo.items() if k != "HGuided steal"}
+    assert max(paper, key=paper.get) == "HGuided opt"
+    assert geo["HGuided steal"] + 1e-9 >= geo["HGuided opt"]
     assert geo["HGuided opt"] > geo["HGuided"]          # +~3% in the paper
     assert geo["HGuided opt"] > 0.8                     # paper: 0.84
 
