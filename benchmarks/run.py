@@ -12,6 +12,7 @@ own scale/roofline benches.  Prints ``name,us_per_call,derived`` CSV lines
   offload_modes  binary vs ROI offload modes (paper's 17.4% ROI gap)
   transfer_overlap  pooled buffers + overlapped staging vs per-packet sync
   sched_overhead  lease-amortized dispatch + steal tail vs per-packet lock
+  dag_pipeline  dependency-aware DAG dispatch vs level barriers + resume
   scale1000    1024-group fleet scheduling (beyond paper)
   roofline     three-term roofline over the dry-run artifacts
 """
@@ -129,8 +130,8 @@ def main() -> None:
     for mod_name in ("fig3_speedup_efficiency", "fig4_balance",
                      "fig5_param_sweep", "fig6_inflection",
                      "real_engine", "session_reuse", "offload_modes",
-                     "transfer_overlap", "sched_overhead", "scale1000",
-                     "roofline"):
+                     "transfer_overlap", "sched_overhead", "dag_pipeline",
+                     "scale1000", "roofline"):
         print(f"\n==== {mod_name} ====", flush=True)
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
         try:

@@ -1,8 +1,9 @@
 """Benchmark-trend gate: merge headline ratios, compare to the baseline.
 
 CI's ``bench-trend`` job runs ``session_reuse.py``, ``offload_modes.py
---smoke``, ``transfer_overlap.py --smoke`` and ``sched_overhead.py
---smoke`` with ``--json``, then calls this script to (a) merge the
+--smoke``, ``transfer_overlap.py --smoke``, ``sched_overhead.py
+--smoke`` and ``dag_pipeline.py --smoke`` with ``--json``, then calls
+this script to (a) merge the
 result files into one ``BENCH_PR.json`` artifact and (b) fail the job if
 any **headline ratio** regresses more than ``--tolerance`` (default
 10 %) below the committed ``benchmarks/baseline.json``.
@@ -18,6 +19,8 @@ Headline ratios (all higher-is-better percentages):
 * ``sched_overhead_min_gain_pct``    — min-over-kernels gain of leased
   dispatch (the work-stealing scheduler) over the per-packet-lock
   hand-off at the highest packet count.
+* ``dag_pipeline_min_gain_pct``      — dependency-aware DAG dispatch
+  gain over level-barrier dispatch at the top packet count.
 
 Baseline values are committed *derated* from locally measured numbers so
 the gate trips on real regressions, not container noise.
@@ -25,6 +28,7 @@ the gate trips on real regressions, not container noise.
 Usage:
   python benchmarks/trend.py --session-reuse sr.json --offload-modes om.json
       --transfer-overlap to.json --sched-overhead so.json
+      --dag-pipeline dag.json
       [--baseline benchmarks/baseline.json]
       [--out BENCH_PR.json] [--tolerance 0.10]
 """
@@ -36,7 +40,8 @@ import pathlib
 import sys
 
 
-def headline_metrics(sr: dict, om: dict, to: dict, so: dict) -> dict:
+def headline_metrics(sr: dict, om: dict, to: dict, so: dict,
+                     dag: dict) -> dict:
     return {
         "session_reuse_min_gap_pct": sr["min_gap_pct"],
         "offload_modes_best_gap_pct": max(
@@ -44,6 +49,7 @@ def headline_metrics(sr: dict, om: dict, to: dict, so: dict) -> dict:
         ),
         "transfer_overlap_min_gain_pct": to["min_gain_pct"],
         "sched_overhead_min_gain_pct": so["min_gain_pct"],
+        "dag_pipeline_min_gain_pct": dag["min_gain_pct"],
     }
 
 
@@ -53,6 +59,7 @@ def main(argv=None) -> int:
     ap.add_argument("--offload-modes", required=True)
     ap.add_argument("--transfer-overlap", required=True)
     ap.add_argument("--sched-overhead", required=True)
+    ap.add_argument("--dag-pipeline", required=True)
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--out", default="BENCH_PR.json")
     ap.add_argument("--tolerance", type=float, default=0.10,
@@ -63,13 +70,15 @@ def main(argv=None) -> int:
     for key, path in (("session_reuse", args.session_reuse),
                       ("offload_modes", args.offload_modes),
                       ("transfer_overlap", args.transfer_overlap),
-                      ("sched_overhead", args.sched_overhead)):
+                      ("sched_overhead", args.sched_overhead),
+                      ("dag_pipeline", args.dag_pipeline)):
         raw[key] = json.loads(pathlib.Path(path).read_text())
     baseline = json.loads(pathlib.Path(args.baseline).read_text())
 
     metrics = headline_metrics(raw["session_reuse"], raw["offload_modes"],
                                raw["transfer_overlap"],
-                               raw["sched_overhead"])
+                               raw["sched_overhead"],
+                               raw["dag_pipeline"])
     failures = []
     for name, base in baseline["metrics"].items():
         if name not in metrics:

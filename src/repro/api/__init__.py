@@ -9,6 +9,12 @@ Three tiers, increasing control:
     elastic device membership shared across many programs;
     ``session.submit(program) -> RunHandle`` (``.result()``, ``.done()``,
     ``.cancel()``) overlaps input prep with in-flight runs;
+    ``submit(..., deps=[h1, h2])`` builds a dependency DAG dispatched
+    ready-set style (each node starts the moment its actual predecessors
+    finish; cancelled predecessors cascade, failed ones raise
+    ``DependencyError``), and ``submit(..., journal=RunJournal(path))``
+    journals packet commits so ``resume_run`` restarts a killed graph
+    executing only never-committed packets;
     ``register_workload`` + ``submit(..., region=..., mode=OffloadMode.
     ROI)`` is the paper's ROI offloading, ``mode=OffloadMode.BINARY`` its
     self-contained binary offloading.
@@ -27,22 +33,26 @@ default for warm ROI submits: run buffers lease from the session's
 
 See docs/api.md for the tier table and the offload-modes guide.
 """
-from repro.api.handles import CancelledError, RunHandle
+from repro.api.handles import CancelledError, DependencyError, RunHandle
 from repro.api.policies import (BufferPolicy, DevicePolicy, OffloadMode,
                                 StaticDevicePolicy)
 from repro.api.session import EngineSession
 from repro.api.tier1 import coexec
+from repro.ckpt.checkpoint import ResumeReport, RunJournal, resume_run
 from repro.core.membuf import ArenaStats, BufferArena, TransferPipeline
 from repro.core.metrics import PhaseBreakdown
 from repro.core.region import Dim, Region
 from repro.core.runtime import Program
-from repro.core.scheduler import (available_schedulers, register_scheduler,
-                                  scheduler_accepts, unregister_scheduler)
+from repro.core.scheduler import (GraphProgress, available_schedulers,
+                                  register_scheduler, scheduler_accepts,
+                                  unregister_scheduler)
 
 __all__ = [
     "ArenaStats", "BufferArena", "BufferPolicy", "CancelledError",
-    "DevicePolicy", "Dim", "EngineSession", "OffloadMode", "PhaseBreakdown",
-    "Program", "Region", "RunHandle", "StaticDevicePolicy",
+    "DependencyError", "DevicePolicy", "Dim", "EngineSession",
+    "GraphProgress", "OffloadMode", "PhaseBreakdown", "Program", "Region",
+    "ResumeReport", "RunHandle", "RunJournal", "StaticDevicePolicy",
     "TransferPipeline", "available_schedulers", "coexec",
-    "register_scheduler", "scheduler_accepts", "unregister_scheduler",
+    "register_scheduler", "resume_run", "scheduler_accepts",
+    "unregister_scheduler",
 ]

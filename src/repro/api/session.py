@@ -13,11 +13,23 @@ where that reuse lives:
   * **elastic device membership** across runs (``add_device`` /
     ``remove_device`` renormalize scheduler powers on the next submit);
   * a **WorkerPool** of device threads reused run-to-run;
-  * an async **submit queue**: ``submit(program) -> RunHandle`` returns
+  * an async **submit graph**: ``submit(program) -> RunHandle`` returns
     immediately, so callers overlap input preparation with in-flight runs
-    exactly as the init optimization overlaps compiles.  Submitted programs
-    dispatch strictly in order (one co-execution owns the fleet at a time —
-    the paper's co-execution model), but never block the submitting thread.
+    exactly as the init optimization overlaps compiles.  A submit may name
+    predecessor handles (``deps=[h1, h2]``): the session maintains the
+    dependency DAG and its **ready-set dispatcher** starts each dependent
+    the moment its actual predecessors finish — true DAG dispatch, not
+    level-by-level barriers.  Independent submits keep strict FIFO order
+    at the default ``max_inflight=1`` (one co-execution owns the fleet at
+    a time — the paper's co-execution model); raising ``max_inflight``
+    lets several ready runs co-execute over the shared fleet, which is
+    what lets a multi-stage pipeline fill one stage's drain tail with the
+    next stage's packets.  Predecessor results flow into dependents via
+    the ``feed`` hook (called with the deps' RunResults just before
+    dispatch), so pooled predecessor outputs are consumed in place —
+    inter-stage data never round-trips through fresh staging.  A
+    cancelled predecessor cascades (dependents transition to CANCELLED);
+    a failed predecessor fails dependents with ``DependencyError``.
   * a **workload registry** for the paper's ROI offloading:
     ``register_workload(program)`` pays init once (executables built,
     buffers registered on every device); subsequent
@@ -30,10 +42,10 @@ Blocking callers use ``session.run(program)`` or Tier-1
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import threading
 import time
+import weakref
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -42,8 +54,8 @@ from repro.core.membuf import ArenaStats, BufferArena
 from repro.core.metrics import RunResult
 from repro.core.region import Region
 from repro.core.runtime import Program, WorkerPool, _RunContext
-from repro.core.scheduler import scheduler_spec
-from repro.api.handles import RunHandle
+from repro.core.scheduler import GraphProgress, scheduler_spec
+from repro.api.handles import DependencyError, RunHandle
 from repro.api.policies import BufferPolicy, DevicePolicy, OffloadMode
 
 
@@ -60,6 +72,10 @@ class _Submission:
     mode: Optional[OffloadMode] = None
     buffer_policy: Optional[BufferPolicy] = None
     dispatch: Optional[str] = None
+    deps: List[RunHandle] = field(default_factory=list)
+    feed: Optional[Callable] = None      # feed(dep_results) before dispatch
+    journal: Optional[object] = None     # RunJournal for packet commits
+    journal_key: Optional[str] = None
     handle: RunHandle = field(default=None)  # type: ignore[assignment]
 
 
@@ -78,11 +94,20 @@ class EngineSession:
                  arena_capacity_bytes: int = 256 << 20,
                  arena_ring: int = 2,
                  dispatch: str = "leased",
+                 max_inflight: int = 1,
                  name: str = "session"):
         scheduler_spec(scheduler)            # fail fast on unknown names
         if dispatch not in ("leased", "per_packet"):
             raise ValueError(f"dispatch must be 'leased' or 'per_packet', "
                              f"got {dispatch!r}")
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, "
+                             f"got {max_inflight}")
+        # how many READY submits may co-execute at once.  1 (default)
+        # preserves strict FIFO: one run owns the fleet at a time.  >1 is
+        # the DAG-pipelining mode: a dependent whose predecessors are done
+        # co-executes with unrelated runs over the shared fleet.
+        self.max_inflight = max_inflight
         self.dispatch = dispatch
         self.device_policy = device_policy or DevicePolicy()
         self._devices: List[DeviceGroup] = \
@@ -109,7 +134,13 @@ class EngineSession:
         self._lock = threading.Lock()
 
         self._pool = WorkerPool(name=name)
-        self._queue: "collections.deque[_Submission]" = collections.deque()
+        # the pending set IS the dependency graph: submissions hold their
+        # predecessor handles, and the ready-set dispatcher scans in submit
+        # order (FIFO among simultaneously-ready nodes)
+        self._pending: List[_Submission] = []
+        self._inflight = 0                   # started, not yet terminal
+        self._graph = GraphProgress()
+        self._issued: "weakref.WeakSet[RunHandle]" = weakref.WeakSet()
         self._cv = threading.Condition()
         self._closing = False
         self._seq = 0
@@ -262,7 +293,11 @@ class EngineSession:
                region: Optional[Region] = None,
                mode: Optional[OffloadMode] = None,
                buffer_policy: Optional[BufferPolicy] = None,
-               dispatch: Optional[str] = None) -> RunHandle:
+               dispatch: Optional[str] = None,
+               deps: Optional[Sequence[RunHandle]] = None,
+               feed: Optional[Callable] = None,
+               journal=None,
+               journal_key: Optional[str] = None) -> RunHandle:
         """Enqueue a program; returns a future-like RunHandle immediately.
 
         ``powers`` overrides the per-device computing powers for this run;
@@ -295,6 +330,23 @@ class EngineSession:
         with the scheduler's adaptive ``lease``/``acquire`` path) or
         ``"per_packet"`` (one lock crossing per packet, the measurable
         baseline).
+
+        ``deps`` lists predecessor RunHandles from THIS session: the run
+        stays pending until every predecessor succeeds, then dispatches
+        the moment the last one finishes (ready-set DAG dispatch — no
+        level barriers).  A cancelled predecessor cascades (this handle
+        transitions to CANCELLED); a failed one fails this handle with
+        :class:`DependencyError`.  ``feed(dep_results)`` — if given — is
+        called on the dispatch thread with the predecessors' RunResults
+        (in ``deps`` order) just before init, so the program's closures
+        can consume predecessor outputs in place; a ``feed`` that raises
+        fails this run (and, transitively, its dependents).
+
+        ``journal`` is a ``repro.ckpt.RunJournal``: every committed packet
+        is appended (offset/size in the program's dim-0 frame under
+        ``journal_key``, default the program name) so a killed graph can
+        be resumed via ``repro.ckpt.resume_run`` executing only
+        never-committed packets.
         """
         program.validate()
         if scheduler is not None:
@@ -356,6 +408,18 @@ class EngineSession:
             # pooled is the default for warm ROI submits: that is where
             # buffer reuse and transfer overlap actually pay off
             buffer_policy = BufferPolicy.POOLED
+        dep_list = list(deps or [])
+        for d in dep_list:
+            if not isinstance(d, RunHandle):
+                raise TypeError(
+                    f"{program.name}: deps must be RunHandles, got {d!r}")
+            if d not in self._issued:
+                raise ValueError(
+                    f"{program.name}: dep {d!r} was not issued by this "
+                    "session — cross-session dependencies are not "
+                    "supported (the dispatcher could not drain them)")
+        if feed is not None and not callable(feed):
+            raise TypeError(f"{program.name}: feed must be callable")
         sub = _Submission(
             program=program, powers=powers,
             scheduler=scheduler or self.scheduler,
@@ -363,45 +427,123 @@ class EngineSession:
             cache=cache, collect=collect,
             region=region, mode=mode,
             buffer_policy=buffer_policy,
-            dispatch=dispatch)
+            dispatch=dispatch,
+            deps=dep_list, feed=feed,
+            journal=journal, journal_key=journal_key)
+        work = (region if region is not None
+                else program.work_region).dims[0].size
         with self._cv:
             if self._closing:
                 raise RuntimeError(f"session {self.name!r} is closed")
             sub.handle = RunHandle(program.name, self._seq,
-                                   discard=lambda: self._discard(sub))
+                                   discard=lambda: self._discard(sub),
+                                   deps=dep_list)
             self._seq += 1
-            self._queue.append(sub)
-            self._cv.notify()
+            self._pending.append(sub)
+            self._issued.add(sub.handle)
+            # graph-wide accounting: static dim-0 total until the run
+            # context attaches its live scheduler (see GraphProgress)
+            self._graph.register(sub.handle, work)
+            self._cv.notify_all()
         return sub.handle
 
     def _discard(self, sub: _Submission) -> None:
-        """Remove a cancelled submission from the queue (it must not wait
-        for — nor pay — dispatch)."""
+        """Remove a cancelled submission from the pending set (it must not
+        wait for — nor pay — dispatch).  Wakes the dispatcher so the
+        cancel cascades to dependents immediately."""
         with self._cv:
             try:
-                self._queue.remove(sub)
+                self._pending.remove(sub)
             except ValueError:
                 pass                          # already popped by dispatch
+            self._cv.notify_all()
+        self._graph.complete(sub.handle)
 
     def run(self, program: Program, **kw) -> RunResult:
         """Blocking convenience: ``submit(...).result()``."""
         return self.submit(program, **kw).result()
 
     # -- dispatch ------------------------------------------------------------
+    def _next_action_locked(self) -> Optional[Tuple[str, _Submission]]:
+        """Scan the pending set (submit order) for the first actionable
+        node.  Called under ``self._cv``; pops the submission it returns.
+
+        Ready-set state machine per pending node:
+          * any predecessor CANCELLED  -> ``("cancel", sub)`` — cascade;
+          * any predecessor failed     -> ``("dep_failed", sub)``;
+          * all predecessors succeeded -> ``("run", sub)`` iff an inflight
+            slot is free (no deps == trivially ready);
+          * otherwise the node stays pending.
+        """
+        for sub in list(self._pending):
+            if any(d.cancelled() for d in sub.deps):
+                self._pending.remove(sub)
+                return ("cancel", sub)
+            if any(d.failed() for d in sub.deps):
+                self._pending.remove(sub)
+                return ("dep_failed", sub)
+            if (self._inflight < self.max_inflight
+                    and all(d.succeeded() for d in sub.deps)):
+                self._pending.remove(sub)
+                return ("run", sub)
+        return None
+
     def _dispatch_loop(self) -> None:
         while True:
             with self._cv:
-                while not self._queue and not self._closing:
+                action = self._next_action_locked()
+                while action is None:
+                    if (self._closing and not self._pending
+                            and self._inflight == 0):
+                        return                # closing and graph drained
                     self._cv.wait()
-                if not self._queue:
-                    return                    # closing and drained
-                sub = self._queue.popleft()
-            if not sub.handle._start():
-                continue                      # cancelled while queued
+                    action = self._next_action_locked()
+                kind, sub = action
+                if kind == "run":
+                    self._inflight += 1
+            if kind == "cancel":
+                # predecessor cancelled -> this node cancels too; its own
+                # dependents cascade on the next scan (transitively)
+                sub.handle._cascade_cancel()
+                self._graph.complete(sub.handle)
+            elif kind == "dep_failed":
+                failed = next(d for d in sub.deps if d.failed())
+                exc = DependencyError(sub.program.name,
+                                      failed.program_name,
+                                      cause=failed._exception)
+                exc.__cause__ = failed._exception
+                sub.handle._set_exception(exc)
+                self._graph.complete(sub.handle)
+            elif not sub.handle._start():     # cancelled while pending
+                self._graph.complete(sub.handle)
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
+            else:
+                self._pool.submit(self._runner(sub))
+
+    def _runner(self, sub: _Submission) -> Callable[[], None]:
+        """Job body for one started node: feed predecessor results, run,
+        settle the handle, free the inflight slot."""
+        def job() -> None:
             try:
+                if sub.feed is not None:
+                    sub.feed([d.result(timeout=0) for d in sub.deps])
                 sub.handle._set_result(self._execute(sub))
             except BaseException as e:        # surfaced via handle.result()
                 sub.handle._set_exception(e)
+            finally:
+                self._graph.complete(sub.handle)
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
+        return job
+
+    def remaining_work(self) -> int:
+        """Outstanding dim-0 work across every non-terminal submit of the
+        session's graph: in-flight runs report their schedulers' exact
+        lease/retry/pool accounting, pending nodes their static totals."""
+        return self._graph.remaining()
 
     def _execute(self, sub: _Submission) -> RunResult:
         with self._lock:
@@ -430,7 +572,11 @@ class EngineSession:
             powers=sub.powers,
             collect=sub.collect,
             region=sub.region,
-            dispatch=sub.dispatch or self.dispatch)
+            dispatch=sub.dispatch or self.dispatch,
+            journal=sub.journal,
+            journal_key=sub.journal_key,
+            progress=self._graph,
+            progress_key=sub.handle)
         result = ctx.execute()
         if sub.mode is OffloadMode.BINARY:
             # the binary contract tears down per submit: evict anything
@@ -448,18 +594,20 @@ class EngineSession:
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
-        """Drain queued runs, release the arena, stop the pool — in that
-        order.  The dispatch queue must drain *before* the arena closes
-        (an in-flight pooled run acquires from it) and the arena must
-        release its entries *before* ``WorkerPool.close()`` — a close
-        racing in-flight submits must not leak arena entries behind a
-        dead pool."""
+        """Drain the pending graph, release the arena, stop the pool — in
+        that order.  The dispatcher drains every pending submission in
+        topological order (dependents run after — or fail/cancel cleanly
+        with — their predecessors; no queued ``_Submission`` leaks), and
+        the graph must drain *before* the arena closes (an in-flight
+        pooled run acquires from it) and the arena must release its
+        entries *before* ``WorkerPool.close()`` — a close racing in-flight
+        submits must not leak arena entries behind a dead pool."""
         with self._cv:
             if self._closing:
                 return
             self._closing = True
             self._cv.notify_all()
-        self._dispatcher.join()              # drains every queued submit
+        self._dispatcher.join()              # drains the whole graph
         self.arena.close()                   # pooled buffers released
         self._pool.close()
 

@@ -290,7 +290,11 @@ class _RunContext:
                  powers: Optional[List[float]] = None,
                  collect: Optional[Callable] = None,
                  region: Optional[Region] = None,
-                 dispatch: str = "leased"):
+                 dispatch: str = "leased",
+                 journal=None,
+                 journal_key: Optional[str] = None,
+                 progress=None,
+                 progress_key: Optional[object] = None):
         self.program = program
         self.devices = list(devices)
         if not self.devices:
@@ -318,6 +322,17 @@ class _RunContext:
         # full NDRange; containment/alignment is validated at submit time
         self.run_region = region if region is not None \
             else program.work_region
+        # persistent run state: every committed packet appends (node key,
+        # absolute dim-0 span, output rows) to the journal — the basis of
+        # checkpoint/resume (repro.ckpt.checkpoint.RunJournal).  Offsets
+        # are journaled relative to the PROGRAM's region start, so a
+        # resumed gap sub-run composes with the original run's records.
+        self.journal = journal
+        self.journal_key = journal_key or program.name
+        # per-graph work accounting: the session's GraphProgress learns
+        # this run's live scheduler so graph-wide remaining() is exact
+        self.progress = progress
+        self.progress_key = progress_key
 
     def _invoke(self, fn: Callable, region: Region) -> Callable:
         """Adapt a packet's absolute row panel to the range-fn contract
@@ -424,13 +439,27 @@ class _RunContext:
         def sched_of(i: int) -> SchedulerBase:
             return state["sched"]
 
+        # journal offsets are node-relative (program-region dim-0 units),
+        # so a resumed gap sub-run's records land in node coordinates
+        jbase = (run_region.dims[0].offset
+                 - prog.work_region.dims[0].offset)
+
+        def journal_commit(pkt, rows) -> None:
+            """Append one committed packet to the run journal (called
+            under the packet's commit, before its scheduler release)."""
+            if self.journal is not None:
+                self.journal.append_packet(self.journal_key,
+                                           jbase + pkt.offset, pkt.size,
+                                           rows)
+
         def make_commit(i, pkt, res):
             def commit():
                 try:
                     r0 = pkt.offset * prog.out_rows_per_wg
                     r1 = (pkt.offset + pkt.size) * prog.out_rows_per_wg
-                    output[r0:r1] = np.asarray(res).reshape(r1 - r0,
-                                                            out_cols)
+                    rows = np.asarray(res).reshape(r1 - r0, out_cols)
+                    output[r0:r1] = rows
+                    journal_commit(pkt, rows)
                     executed_by[i].append(("pkt", pkt))
                 except Exception as e:
                     # host-side commit failure is fatal for the run: the
@@ -525,6 +554,7 @@ class _RunContext:
                     else:
                         my_done.append(("copy", r0, r1,
                                         np.array(res, copy=True)))
+                    journal_commit(pkt, res)
                     my_done.append(("pkt", pkt))
                     sched.release(i)
                 except Exception as e:
@@ -637,15 +667,22 @@ class _RunContext:
             return [self.pool.submit(_bind(device_thread, i))
                     for i in range(n)]
 
+        def build_scheduler() -> SchedulerBase:
+            sched = make_scheduler(self.scheduler_name, run_region,
+                                   run_region.dims[0].lws, profiles,
+                                   **self.scheduler_kwargs)
+            if self.progress is not None:
+                # graph-wide remaining() now reads this run's live
+                # lease/exact-cover bookkeeping instead of its static G
+                self.progress.attach(self.progress_key, sched)
+            return sched
+
         try:
             if self.parallel_init:
                 done_events = start_threads()
                 # Runtime prepares the scheduler concurrently with compiles
                 try:
-                    state["sched"] = make_scheduler(
-                        self.scheduler_name, run_region,
-                        run_region.dims[0].lws, profiles,
-                        **self.scheduler_kwargs)
+                    state["sched"] = build_scheduler()
                 except BaseException:
                     # release the pooled threads parked at the barrier (they
                     # see sched=None and exit) before surfacing the error —
@@ -667,11 +704,7 @@ class _RunContext:
                     except Exception as e:
                         d.dead = True
                         errors.append(e)
-                state["sched"] = make_scheduler(self.scheduler_name,
-                                                run_region,
-                                                run_region.dims[0].lws,
-                                                profiles,
-                                                **self.scheduler_kwargs)
+                state["sched"] = build_scheduler()
                 done_events = start_threads()
                 ready.wait()
             clock.mark("compiled")

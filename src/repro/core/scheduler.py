@@ -695,6 +695,69 @@ class HGuidedStealScheduler(HGuidedDeadlineScheduler):
         return self.lease(device)
 
 
+class GraphProgress:
+    """Work accounting across the many scheduler contexts of one run graph.
+
+    Each DAG node dispatches through its *own* scheduler instance
+    (one ``_RunContext`` per submit), so no single scheduler can answer
+    "how much of the graph is left?".  This tracker can: every submitted
+    node registers its total dim-0 work up front; when its run context
+    constructs its scheduler it attaches it (``remaining()`` then reads
+    the live lease/exact-cover bookkeeping instead of the static total);
+    terminal nodes — committed, failed, cancelled — drop out.
+
+    Thread-safe: the session registers on the submit thread, run contexts
+    attach from pooled runner threads, and ``remaining()`` may be polled
+    by any observer.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._total: Dict[object, int] = {}      # node -> registered wg
+        self._live: Dict[object, SchedulerBase] = {}
+
+    def register(self, key: object, total_work: int) -> None:
+        with self._lock:
+            self._total[key] = int(total_work)
+
+    def attach(self, key: object, sched: "SchedulerBase") -> None:
+        """Swap the node's static total for its live scheduler."""
+        with self._lock:
+            if key in self._total:
+                self._live[key] = sched
+
+    def complete(self, key: object) -> None:
+        """Drop a terminal node (done, failed, or cancelled)."""
+        with self._lock:
+            self._total.pop(key, None)
+            self._live.pop(key, None)
+
+    def remaining(self) -> int:
+        """Outstanding work-groups across every non-terminal node of the
+        graph: live schedulers report their exact lease/retry/pool
+        accounting; not-yet-dispatched nodes report their full totals."""
+        with self._lock:
+            items = list(self._total.items())
+            live = dict(self._live)
+        out = 0
+        for key, total in items:
+            sched = live.get(key)
+            out += sched.remaining() if sched is not None else total
+        return out
+
+    def nodes(self) -> Dict[object, int]:
+        """Per-node outstanding work (same accounting as ``remaining``)."""
+        with self._lock:
+            items = list(self._total.items())
+            live = dict(self._live)
+        return {key: (live[key].remaining() if key in live else total)
+                for key, total in items}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._total)
+
+
 # ---------------------------------------------------------------- registry
 @dataclass(frozen=True)
 class SchedulerSpec:

@@ -311,6 +311,191 @@ def single_device_time(total_work: int, lws: int, device: SimDevice,
 
 
 # ---------------------------------------------------------------------------
+# DAG-aware simulation: the EngineSession ready-set dispatcher's twin.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimNode:
+    """One node of a simulated run graph: a co-executable range plus the
+    names of its predecessor nodes."""
+    name: str
+    total_work: int
+    lws: int = 1
+    deps: Tuple[str, ...] = ()
+
+
+@dataclass
+class DagSimResult:
+    makespan: float
+    node_finish: Dict[str, float]
+    node_start: Dict[str, float]
+    device_busy: List[float]
+    depth: Dict[str, int]                  # node -> DAG level
+
+
+def dag_depths(nodes: Sequence[SimNode]) -> Dict[str, int]:
+    """Longest-path depth of every node (0 for roots); raises on cycles
+    or unknown dep names."""
+    by_name = {n.name: n for n in nodes}
+    if len(by_name) != len(nodes):
+        raise ValueError("duplicate node names")
+    depth: Dict[str, int] = {}
+
+    def visit(name: str, stack: Tuple[str, ...]) -> int:
+        if name in depth:
+            return depth[name]
+        if name in stack:
+            raise ValueError(f"dependency cycle through {name!r}")
+        node = by_name.get(name)
+        if node is None:
+            raise ValueError(f"unknown dep {name!r}")
+        d = 0 if not node.deps else 1 + max(
+            visit(p, stack + (name,)) for p in node.deps)
+        depth[name] = d
+        return d
+
+    for n in nodes:
+        visit(n.name, ())
+    return depth
+
+
+def simulate_dag(nodes: Sequence[SimNode], devices: Sequence[SimDevice],
+                 cfg: SimConfig, *,
+                 dispatch_mode: str = "deps") -> DagSimResult:
+    """Discrete-event execution of a run graph over a shared fleet.
+
+    The threaded twin is ``EngineSession(max_inflight=n)`` with
+    ``submit(..., deps=...)``: every *active* node owns its own scheduler
+    instance (exactly like one ``_RunContext`` per submit) and a free
+    device pulls from the earliest-submitted active node that still has
+    work, so concurrently-ready nodes co-execute over the same devices.
+
+    ``dispatch_mode`` selects the readiness rule under comparison:
+
+    * ``"deps"``  — ready-set dispatch: a node activates the instant its
+      actual predecessors finish (the session's DAG dispatcher);
+    * ``"levels"`` — level-barrier dispatch: a node activates only once
+      EVERY node of lower depth has finished (the classic breadth-first
+      baseline the benchmark beats — a barrier drains the fleet to idle
+      at each level boundary and the largest node gates its whole level).
+
+    Healthy-fleet model: per-packet costs, irregularity, jitter and the
+    buffer-policy transfer model are simulate()'s; failure/straggler
+    injection stays with the single-run ``simulate``.
+    """
+    import random
+    if dispatch_mode not in ("deps", "levels"):
+        raise ValueError(f"dispatch_mode must be 'deps' or 'levels', "
+                         f"got {dispatch_mode!r}")
+    rng = random.Random(cfg.seed)
+    depth = dag_depths(nodes)
+    policy = cfg.policy
+    leased = cfg.dispatch == "leased"
+    hand_off = cfg.hand_off_cost
+    n_dev = len(devices)
+    profiles = [DeviceProfile(d.name, d.throughput * d.profile_bias)
+                for d in devices]
+
+    finished: Dict[str, float] = {}
+    started: Dict[str, float] = {}
+    scheds: Dict[str, object] = {}         # active node -> scheduler
+    max_end: Dict[str, float] = {}         # active node -> latest packet end
+    first = [True] * n_dev                 # pipeline fill per device
+
+    def ready(node: SimNode, now: float) -> bool:
+        if dispatch_mode == "deps":
+            return all(p in finished for p in node.deps)
+        return all(finished.get(m.name) is not None
+                   for m in nodes if depth[m.name] < depth[node.name])
+
+    def activate(now: float) -> bool:
+        woke = False
+        for node in nodes:                 # submit order == FIFO priority
+            if node.name in scheds or node.name in finished:
+                continue
+            if ready(node, now):
+                sched = make_scheduler(cfg.scheduler, node.total_work,
+                                       node.lws, profiles,
+                                       **cfg.scheduler_kwargs)
+                if leased:
+                    sched.lease_overhead_s = hand_off
+                scheds[node.name] = sched
+                max_end[node.name] = now
+                started[node.name] = now
+                woke = True
+        return woke
+
+    activate(0.0)
+    busy = [0.0] * n_dev
+    free = [0.0] * n_dev
+    heap: List[Tuple[float, int]] = [(0.0, i) for i in range(n_dev)]
+    heapq.heapify(heap)
+    idle: List[int] = []
+    host_free = 0.0
+
+    while heap:
+        t, i = heapq.heappop(heap)
+        d = devices[i]
+        # pull from the earliest-submitted active node with work
+        pkt = None
+        src = None
+        for node in nodes:
+            sched = scheds.get(node.name)
+            if sched is None or node.name in finished:
+                continue
+            c0 = sched.stats.lock_crossings
+            pkt = sched.acquire(i) if leased else sched.next_packet(i)
+            crossings = sched.stats.lock_crossings - c0
+            if pkt is not None:
+                src = node
+                break
+        if pkt is None:
+            idle.append(i)                 # re-woken on node activation
+            free[i] = t
+            continue
+        if crossings:
+            start = max(t, host_free)
+            host_free = start + crossings * hand_off
+        else:
+            start = t
+        dt = d.packet_cost(pkt.offset, pkt.size, src.total_work, start,
+                           policy, first[i])[0] + (start - t)
+        first[i] = False
+        if d.jitter > 0:
+            dt *= math.exp(rng.gauss(0.0, d.jitter))
+        end = t + dt
+        busy[i] += dt
+        free[i] = end
+        sched = scheds[src.name]
+        max_end[src.name] = max(max_end[src.name], end)
+        sched.note_packet_latency(i, dt)
+        if hasattr(sched, "observe"):
+            sched.observe(i, pkt.size / max(dt, 1e-12))
+        sched.release(i)
+        if sched.remaining() == 0 and src.name not in finished:
+            # every packet of this node has been carved AND resolved (each
+            # acquire resolves its end time immediately), so the node's
+            # finish is the latest packet end — not this packet's
+            fin = max_end[src.name]
+            finished[src.name] = fin
+            if activate(fin):
+                # newly-ready nodes: wake every parked device
+                for j in idle:
+                    heapq.heappush(heap, (max(fin, free[j]), j))
+                idle = []
+        heapq.heappush(heap, (end, i))
+
+    if len(finished) != len(nodes):
+        raise RuntimeError(
+            f"graph stalled: {sorted(set(n.name for n in nodes) - set(finished))} "
+            "never became ready (cycle or lost wakeup)")
+    return DagSimResult(makespan=max(finished.values(), default=0.0),
+                        node_finish=dict(finished),
+                        node_start=dict(started),
+                        device_busy=busy, depth=depth)
+
+
+# ---------------------------------------------------------------------------
 # Open-loop serving: the CoexecServer's discrete-event twin.
 # ---------------------------------------------------------------------------
 

@@ -138,10 +138,10 @@ def test_cancel_queued_removes_submission_without_paying_init():
     with EngineSession(devices3(), init_cost_s=0.2) as session:
         h1 = session.submit(slow)          # occupies the dispatcher
         h2 = session.submit(doomed)
-        assert len(session._queue) >= 1    # doomed is queued
+        assert len(session._pending) >= 1    # doomed is queued
         assert h2.cancel()
         assert h2.done() and h2.cancelled()      # flips immediately...
-        assert all(s.handle is not h2 for s in session._queue)  # ...and gone
+        assert all(s.handle is not h2 for s in session._pending)  # ...and gone
         h1.result()
         h3 = session.submit(slow)          # queue still serviceable
         h3.result()

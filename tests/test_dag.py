@@ -1,0 +1,471 @@
+"""Graph-invariant property suite for DAG-structured submits.
+
+The session's ready-set dispatcher must preserve, for ANY graph shape
+(chains, diamonds, fan-in/fan-out), any registered scheduler and any
+inflight width — with or without injected device deaths:
+
+  (a) topological execution order: a node's ``feed`` runs only after
+      every predecessor succeeded;
+  (b) exact cover: each node's committed packets tile its region with
+      no gap and no overlap (the PR-2/PR-5 invariant, per graph node);
+  (c) bit-identical outputs vs a sequential numpy oracle.
+
+The journal/resume half locks down crash recovery: killing a journaled
+run at any packet boundary and resuming must re-execute ZERO committed
+packets and stitch a bit-identical output.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (CancelledError, DependencyError, EngineSession,
+                       GraphProgress, RunJournal, resume_run)
+from repro.ckpt.checkpoint import merge_spans
+from repro.core.device import DeviceGroup
+from repro.core.runtime import Program
+from repro.core.scheduler import available_schedulers
+from repro.core.simulate import (SimConfig, SimDevice, SimNode, dag_depths,
+                                 simulate_dag)
+
+WIDTH = 16
+
+
+def devices(n=3, fail_after=None):
+    devs = [DeviceGroup(f"d{i}", throttle=1.0 + 0.5 * i) for i in range(n)]
+    if fail_after is not None:
+        devs[-1].fail_after = fail_after
+    return devs
+
+
+def node_program(name, G, lws, holder, seed):
+    """One graph node: row r of the output is ``base[r] * (1 + bias)``
+    where ``bias`` is fed from the predecessors' outputs — so any
+    out-of-order dispatch corrupts the result detectably."""
+    base = np.random.default_rng(seed).random(
+        (G, WIDTH), dtype=np.float32)
+
+    def build(dev):
+        def run(offset, size):
+            scale = np.float32(1.0) + holder.get("bias", np.float32(0.0))
+            return base[offset:offset + size] * scale
+        return run
+
+    prog = Program(name=name, total_work=G, lws=lws, build=build,
+                   out_rows_per_wg=1, out_cols=WIDTH,
+                   out_dtype=np.float32)
+    return prog, base
+
+
+def bias_of(outputs):
+    """Order-stable checksum mix of the predecessors' outputs."""
+    acc = np.float32(0.0)
+    for out in outputs:
+        acc = acc + np.float32(np.asarray(out, np.float32)[0].sum())
+    return np.float32(0.25) * acc
+
+
+def feed_into(holder, node_name, order, lock):
+    def feed(dep_results):
+        with lock:
+            order.append(node_name)
+        holder["bias"] = bias_of([r.output for r in dep_results])
+    return feed
+
+
+def assert_exact_cover(packets, G):
+    spans = sorted((p.offset, p.offset + p.size) for p in packets)
+    cursor = 0
+    for a, b in spans:
+        assert a == cursor, f"gap/overlap at {a} (expected {cursor})"
+        cursor = b
+    assert cursor == G
+
+
+def run_random_graph(shape, scheduler, max_inflight, fail_after=None):
+    """Execute a random DAG through the session and check the three
+    graph invariants.  ``shape`` is a list of dep-index-lists: node i
+    depends on shape[i] (all < i)."""
+    lws = 4
+    sizes = [lws * (2 + (3 * i) % 4) for i in range(len(shape))]
+    order: list = []
+    lock = threading.Lock()
+    nodes = []
+    for i, deps_idx in enumerate(shape):
+        holder: dict = {}
+        prog, base = node_program(f"n{i}", sizes[i], lws, holder, seed=i)
+        nodes.append({"prog": prog, "base": base, "holder": holder,
+                      "deps_idx": deps_idx})
+    skw = {"n_packets": 4} if scheduler == "dynamic" else {}
+    with EngineSession(devices(3, fail_after=fail_after),
+                       scheduler=scheduler, scheduler_kwargs=skw,
+                       max_inflight=max_inflight,
+                       name=f"dag-{scheduler}") as session:
+        handles = []
+        for i, node in enumerate(nodes):
+            deps = [handles[j] for j in node["deps_idx"]]
+            feed = (feed_into(node["holder"], f"n{i}", order, lock)
+                    if deps else None)
+            handles.append(session.submit(node["prog"], deps=deps,
+                                          feed=feed, cache=False))
+        results = [h.result(timeout=120) for h in handles]
+
+    # (a) topological order: every fed node's feed ran after each of its
+    # predecessors' feeds (prefix property of the recorded feed order)
+    pos = {name: k for k, name in enumerate(order)}
+    for i, node in enumerate(nodes):
+        for j in node["deps_idx"]:
+            if f"n{i}" in pos and f"n{j}" in pos:
+                assert pos[f"n{j}"] < pos[f"n{i}"]
+    # (b) exact cover per node
+    for node, res in zip(nodes, results):
+        assert_exact_cover(res.packets, node["prog"].total_work)
+    # (c) bit-identical vs the sequential oracle
+    oracle_out: list = []
+    for i, node in enumerate(nodes):
+        bias = (bias_of([oracle_out[j] for j in node["deps_idx"]])
+                if node["deps_idx"] else np.float32(0.0))
+        oracle_out.append(node["base"] * (np.float32(1.0) + bias))
+    for i, res in enumerate(results):
+        assert np.array_equal(np.asarray(res.output), oracle_out[i]), \
+            f"node n{i} output differs from oracle"
+
+
+def dag_shapes(max_nodes=6):
+    """Random DAG shape strategy: node i deps on a subset of 0..i-1.
+    Chains, diamonds and fan-in/fan-out all occur."""
+    def build(picks):
+        shape = [[]]
+        for i, pick in enumerate(picks, start=1):
+            shape.append(sorted({p % i for p in pick}))
+        return shape
+    return st.builds(
+        build,
+        st.lists(st.lists(st.integers(0, max_nodes - 1),
+                          min_size=0, max_size=3),
+                 min_size=1, max_size=max_nodes - 1))
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape=dag_shapes(),
+       scheduler=st.sampled_from(available_schedulers()),
+       max_inflight=st.sampled_from([1, 2, 3]))
+def test_random_dag_invariants(shape, scheduler, max_inflight):
+    run_random_graph(shape, scheduler, max_inflight)
+
+
+@settings(max_examples=6, deadline=None)
+@given(shape=dag_shapes(max_nodes=5),
+       scheduler=st.sampled_from(["hguided_opt", "hguided_steal",
+                                  "dynamic"]),
+       fail_after=st.integers(1, 3))
+def test_random_dag_survives_device_death(shape, scheduler, fail_after):
+    """A device dying mid-run (requeue + mark_dead + steal rebalance)
+    must not break cover, order, or exactness — per graph node.
+    FIFO inflight keeps the injected death deterministic per run."""
+    run_random_graph(shape, scheduler, 1, fail_after=fail_after)
+
+
+# -- cascading terminal states ---------------------------------------------
+
+def _gate_program(name, G, lws, gate):
+    def build(dev):
+        def run(offset, size):
+            gate.wait(timeout=60)
+            return np.full((size, WIDTH), np.float32(offset))
+        return run
+    return Program(name=name, total_work=G, lws=lws, build=build,
+                   out_rows_per_wg=1, out_cols=WIDTH,
+                   out_dtype=np.float32)
+
+
+def test_cancel_cascades_transitively():
+    gate = threading.Event()
+    blocker = _gate_program("blocker", 8, 4, gate)
+    holder: dict = {}
+    prog, _ = node_program("mid", 8, 4, holder, seed=1)
+    with EngineSession(devices(2), name="cascade") as session:
+        h0 = session.submit(blocker, cache=False)   # occupies the fleet
+        h1 = session.submit(prog, cache=False)      # pending behind it
+        h2 = session.submit(prog, deps=[h1], cache=False)
+        h3 = session.submit(prog, deps=[h2], cache=False)
+        assert h1.cancel()
+        # dependents cascade without any of them ever dispatching
+        for h in (h2, h3):
+            with pytest.raises(CancelledError):
+                h.result(timeout=30)
+        assert h2.cancelled() and h3.cancelled()
+        gate.set()
+        assert h0.result(timeout=60) is not None
+
+
+def test_cancel_of_running_predecessor_does_not_cascade():
+    gate = threading.Event()
+    blocker = _gate_program("blocker2", 8, 4, gate)
+    holder: dict = {}
+    prog, _ = node_program("dep2", 8, 4, holder, seed=2)
+    with EngineSession(devices(2), name="norun-cancel") as session:
+        h0 = session.submit(blocker, cache=False)
+        h1 = session.submit(prog, deps=[h0], cache=False)
+        time.sleep(0.1)                   # let h0 start
+        assert not h0.cancel()            # already running
+        gate.set()
+        assert h1.result(timeout=60) is not None
+
+
+def test_failed_predecessor_raises_dependency_error():
+    def boom(dev):
+        raise RuntimeError("injected build failure")
+    bad = Program(name="bad", total_work=8, lws=4, build=boom,
+                  out_rows_per_wg=1, out_cols=WIDTH,
+                  out_dtype=np.float32)
+    holder: dict = {}
+    prog, _ = node_program("after-bad", 8, 4, holder, seed=3)
+    with EngineSession(devices(2), name="depfail") as session:
+        hb = session.submit(bad, cache=False)
+        h1 = session.submit(prog, deps=[hb], cache=False)
+        h2 = session.submit(prog, deps=[h1], cache=False)
+        # the engine surfaces the build failure as an all-devices-failed
+        # terminal error, chained from the injected exception
+        with pytest.raises(RuntimeError, match="all devices failed"):
+            hb.result(timeout=30)
+        with pytest.raises(DependencyError) as e1:
+            h1.result(timeout=30)
+        assert e1.value.dep_name == "bad"
+        assert isinstance(e1.value.cause, RuntimeError)
+        assert e1.value.__cause__ is e1.value.cause
+        # the DependencyError itself counts as failure for dependents
+        with pytest.raises(DependencyError) as e2:
+            h2.result(timeout=30)
+        assert e2.value.dep_name == "after-bad"
+        assert isinstance(e2.value.cause, DependencyError)
+
+
+def test_dep_validation():
+    holder: dict = {}
+    prog, _ = node_program("v", 8, 4, holder, seed=4)
+    with EngineSession(devices(2), name="v1") as s1, \
+            EngineSession(devices(2), name="v2") as s2:
+        h = s1.submit(prog, cache=False)
+        with pytest.raises(TypeError):
+            s1.submit(prog, deps=["not-a-handle"], cache=False)
+        with pytest.raises(ValueError, match="not issued by this session"):
+            s2.submit(prog, deps=[h], cache=False)
+        with pytest.raises(TypeError, match="feed must be callable"):
+            s1.submit(prog, feed="nope", cache=False)
+        h.result(timeout=60)
+
+
+def test_feed_failure_fails_run_and_cascades():
+    holder: dict = {}
+    prog, _ = node_program("feedfail", 8, 4, holder, seed=5)
+    with EngineSession(devices(2), name="feedfail") as session:
+        h0 = session.submit(prog, cache=False)
+
+        def bad_feed(results):
+            raise ValueError("feed exploded")
+        h1 = session.submit(prog, deps=[h0], feed=bad_feed, cache=False)
+        h2 = session.submit(prog, deps=[h1], cache=False)
+        with pytest.raises(ValueError, match="feed exploded"):
+            h1.result(timeout=30)
+        with pytest.raises(DependencyError):
+            h2.result(timeout=30)
+
+
+def test_close_drains_pending_graph_topologically():
+    """close() with a whole graph still pending must drain it in
+    dependency order — every handle reaches a terminal state and the
+    pending set is empty (no leaked _Submissions)."""
+    order: list = []
+    lock = threading.Lock()
+    nodes = []
+    for i in range(4):
+        holder: dict = {}
+        prog, base = node_program(f"c{i}", 8, 4, holder, seed=10 + i)
+        nodes.append((prog, base, holder))
+    session = EngineSession(devices(2), max_inflight=2, name="close-graph")
+    handles = [session.submit(nodes[0][0], cache=False)]
+    for i in range(1, 4):
+        handles.append(session.submit(
+            nodes[i][0], deps=[handles[i - 1]],
+            feed=feed_into(nodes[i][2], f"c{i}", order, lock),
+            cache=False))
+    session.close()                        # must block until drained
+    assert all(h.done() for h in handles)
+    assert order == ["c1", "c2", "c3"]
+    assert len(session._pending) == 0 and session._inflight == 0
+    for h in handles:
+        assert h.result(timeout=0) is not None
+
+
+def test_remaining_work_drains_to_zero():
+    holder: dict = {}
+    prog, _ = node_program("rw", 16, 4, holder, seed=6)
+    with EngineSession(devices(2), name="rw") as session:
+        h0 = session.submit(prog, cache=False)
+        h1 = session.submit(prog, deps=[h0], cache=False)
+        # registered totals are visible while pending/in flight
+        assert session.remaining_work() >= 0
+        h1.result(timeout=60)
+    assert session.remaining_work() == 0
+
+
+def test_graph_progress_accounting():
+    gp = GraphProgress()
+    gp.register("a", 32)
+    gp.register("b", 16)
+    assert gp.remaining() == 48 and len(gp) == 2
+    assert gp.nodes() == {"a": 32, "b": 16}
+    gp.complete("a")
+    assert gp.remaining() == 16
+    gp.complete("b")
+    gp.complete("b")                      # idempotent
+    assert gp.remaining() == 0 and len(gp) == 0
+
+
+# -- journal / resume -------------------------------------------------------
+
+def test_journal_roundtrip_and_torn_tail(tmp_path):
+    path = os.path.join(tmp_path, "j.journal")
+    with RunJournal(path) as j:
+        j.append_packet("k", 0, 2, np.arange(8, dtype=np.float32))
+        j.append_packet("k", 2, 2, np.arange(8, 16, dtype=np.float32))
+        j.append_packet("other", 0, 1, np.zeros(4, dtype=np.float32))
+    recs = RunJournal.read(path)
+    assert sorted(recs) == ["k", "other"]
+    assert [(r.offset, r.size) for r in recs["k"]] == [(0, 2), (2, 2)]
+    assert np.array_equal(recs["k"][1].data,
+                          np.arange(8, 16, dtype=np.float32))
+    # torn tail: chop bytes off the last record — it must be dropped,
+    # the committed prefix preserved
+    size = os.path.getsize(path)
+    with open(path, "r+b") as fh:
+        fh.truncate(size - 3)
+    recs = RunJournal.read(path)
+    assert [(r.offset, r.size) for r in recs["k"]] == [(0, 2), (2, 2)]
+    assert "other" not in recs
+    # missing file reads empty; wrong magic raises
+    assert RunJournal.read(os.path.join(tmp_path, "nope")) == {}
+    bad = os.path.join(tmp_path, "bad")
+    with open(bad, "wb") as fh:
+        fh.write(b"NOPE")
+    with pytest.raises(ValueError, match="not a run journal"):
+        RunJournal.read(bad)
+
+
+def test_truncate_packets(tmp_path):
+    path = os.path.join(tmp_path, "j.journal")
+    with RunJournal(path) as j:
+        for i in range(4):
+            j.append_packet("k", 2 * i, 2,
+                            np.full(4, i, dtype=np.float32))
+    out = RunJournal.truncate_packets(path, 2)
+    recs = RunJournal.read(out)["k"]
+    assert [(r.offset, r.size) for r in recs] == [(0, 2), (2, 2)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(kill_frac=st.floats(0.0, 1.0), seed=st.integers(0, 999))
+def test_resume_reexecutes_zero_committed_packets(kill_frac, seed):
+    """Kill a journaled run at any packet boundary; the resume must
+    (1) never re-execute a committed packet — its gap sub-regions are
+    disjoint from the committed spans — and (2) stitch a bit-identical
+    output."""
+    holder: dict = {}
+    prog, _ = node_program(f"rj{seed}", 24, 4, holder, seed=seed)
+    tmp = tempfile.mkdtemp(prefix="dagtest-")
+    path = os.path.join(tmp, "run.journal")
+    with EngineSession(devices(3), name="resume") as session:
+        with RunJournal(path) as j:
+            full = np.asarray(
+                session.submit(prog, journal=j, cache=False)
+                .result(timeout=120).output).copy()
+        records = RunJournal.read(path)[prog.name]
+        keep = int(round(kill_frac * len(records)))
+        trunc = RunJournal.truncate_packets(path, keep)
+        with RunJournal(trunc) as j2:
+            rep = resume_run(session, prog, j2, prog.name, cache=False)
+    committed = merge_spans(records[:keep])
+    # gap sub-regions never touch a committed span
+    for ga, gb in rep.gaps:
+        for ca, cb in committed:
+            assert gb <= ca or ga >= cb, \
+                f"gap [{ga},{gb}) overlaps committed [{ca},{cb})"
+    assert rep.replayed_wg + rep.executed_wg == prog.total_work
+    assert rep.replayed_wg == sum(b - a for a, b in committed)
+    if keep == len(records):
+        assert rep.fully_replayed
+    assert np.array_equal(rep.output, full)
+
+
+def test_resumed_run_extends_journal(tmp_path):
+    """The resume submits with the same journal attached: after the
+    resume, the journal covers the whole region — a SECOND resume
+    replays everything and executes nothing."""
+    holder: dict = {}
+    prog, _ = node_program("rj2", 16, 4, holder, seed=42)
+    path = os.path.join(tmp_path, "run.journal")
+    with EngineSession(devices(2), name="resume2") as session:
+        with RunJournal(path) as j:
+            session.submit(prog, journal=j, cache=False).result(timeout=60)
+        records = RunJournal.read(path)[prog.name]
+        trunc = RunJournal.truncate_packets(path, len(records) // 2)
+        with RunJournal(trunc) as j2:
+            rep1 = resume_run(session, prog, j2, prog.name, cache=False)
+        with RunJournal(trunc) as j3:
+            rep2 = resume_run(session, prog, j3, prog.name, cache=False)
+    assert rep1.executed_wg > 0
+    assert rep2.fully_replayed and rep2.executed_wg == 0
+    assert np.array_equal(rep1.output, rep2.output)
+
+
+# -- the simulator twin -----------------------------------------------------
+
+def sim_fleet():
+    return [SimDevice("a", 1000.0), SimDevice("b", 2000.0),
+            SimDevice("c", 4000.0)]
+
+
+def test_simulate_dag_depths_and_validation():
+    nodes = [SimNode("a", 8), SimNode("b", 8, deps=("a",)),
+             SimNode("c", 8, deps=("a",)),
+             SimNode("d", 8, deps=("b", "c"))]
+    assert dag_depths(nodes) == {"a": 0, "b": 1, "c": 1, "d": 2}
+    with pytest.raises(ValueError, match="cycle"):
+        dag_depths([SimNode("x", 4, deps=("y",)),
+                    SimNode("y", 4, deps=("x",))])
+    with pytest.raises(ValueError, match="unknown dep"):
+        dag_depths([SimNode("x", 4, deps=("ghost",))])
+    with pytest.raises(ValueError, match="dispatch_mode"):
+        simulate_dag(nodes, sim_fleet(), SimConfig(), dispatch_mode="bsp")
+
+
+def test_simulate_dag_respects_dependencies():
+    nodes = [SimNode("a", 64, 8), SimNode("b", 64, 8, deps=("a",)),
+             SimNode("c", 64, 8, deps=("b",))]
+    for mode in ("deps", "levels"):
+        r = simulate_dag(nodes, sim_fleet(), SimConfig(), dispatch_mode=mode)
+        assert r.node_start["b"] >= r.node_finish["a"]
+        assert r.node_start["c"] >= r.node_finish["b"]
+        assert r.makespan == max(r.node_finish.values())
+
+
+def test_simulate_dag_deps_never_slower_than_levels():
+    """Ready-set dispatch relaxes the levels constraint, so on a
+    deterministic fleet it can only start nodes earlier."""
+    nodes = []
+    for i in range(4):
+        h = 128 * (6 if i == 0 else 1)
+        nodes.append(SimNode(f"s{i}", h, h // 2))
+        nodes.append(SimNode(f"t{i}", h, h // 2, deps=(f"s{i}",)))
+    cfg = SimConfig(scheduler="hguided")
+    r_d = simulate_dag(nodes, sim_fleet(), cfg, dispatch_mode="deps")
+    r_l = simulate_dag(nodes, sim_fleet(), cfg, dispatch_mode="levels")
+    assert r_d.makespan <= r_l.makespan * (1 + 1e-9)

@@ -398,6 +398,37 @@ def test_close_drains_inflight_pooled_submits_without_leaking_arena():
         session.submit(prog, mode=OffloadMode.ROI)
 
 
+def test_close_drains_pending_graph_submits_without_leaking_arena():
+    """Graph variant of the close race: close() arriving while DEPENDENT
+    pooled submits are still pending must drain the graph topologically
+    (dependents run after their predecessors, before the arena/pool shut
+    down) — no leaked _Submissions, no leaked arena entries."""
+    prog = P.PROGRAMS["gaussian2d"](**GAUSS_KW)
+    ref = P.reference_output("gaussian2d", **GAUSS_KW)
+    session = EngineSession(devices3(), max_inflight=2)
+    session.register_workload(prog)
+    seen = []
+    root = session.submit(prog, mode=OffloadMode.ROI)
+    mids = [
+        session.submit(
+            prog,
+            mode=OffloadMode.ROI,
+            deps=[root],
+            feed=lambda results: seen.append(len(results)),
+        )
+        for _ in range(3)
+    ]
+    leaf = session.submit(prog, mode=OffloadMode.ROI, deps=mids)
+    session.close()  # must drain root -> mids -> leaf, then release
+    for h in [root, *mids, leaf]:
+        res = h.result(timeout=60)
+        np.testing.assert_allclose(res.output, ref, rtol=1e-5, atol=1e-5)
+    assert seen == [1, 1, 1]  # every mid's feed saw its predecessor
+    assert len(session._pending) == 0 and session._inflight == 0
+    s = session.arena_stats
+    assert s.entries == 0 and s.bytes_total == 0
+
+
 def test_close_is_idempotent_and_arena_closed():
     session = EngineSession(devices3())
     session.close()
