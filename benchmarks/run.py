@@ -13,6 +13,7 @@ own scale/roofline benches.  Prints ``name,us_per_call,derived`` CSV lines
   transfer_overlap  pooled buffers + overlapped staging vs per-packet sync
   sched_overhead  lease-amortized dispatch + steal tail vs per-packet lock
   dag_pipeline  dependency-aware DAG dispatch vs level barriers + resume
+  fleet_slo    deadline-aware fleet routing + elastic autoscaling SLO gates
   scale1000    1024-group fleet scheduling (beyond paper)
   roofline     three-term roofline over the dry-run artifacts
 """
@@ -131,7 +132,7 @@ def main() -> None:
                      "fig5_param_sweep", "fig6_inflection",
                      "real_engine", "session_reuse", "offload_modes",
                      "transfer_overlap", "sched_overhead", "dag_pipeline",
-                     "scale1000", "roofline"):
+                     "fleet_slo", "scale1000", "roofline"):
         print(f"\n==== {mod_name} ====", flush=True)
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
         try:

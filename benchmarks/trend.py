@@ -2,13 +2,13 @@
 
 CI's ``bench-trend`` job runs ``session_reuse.py``, ``offload_modes.py
 --smoke``, ``transfer_overlap.py --smoke``, ``sched_overhead.py
---smoke`` and ``dag_pipeline.py --smoke`` with ``--json``, then calls
-this script to (a) merge the
+--smoke``, ``dag_pipeline.py --smoke`` and ``fleet_slo.py --smoke`` with
+``--json``, then calls this script to (a) merge the
 result files into one ``BENCH_PR.json`` artifact and (b) fail the job if
 any **headline ratio** regresses more than ``--tolerance`` (default
 10 %) below the committed ``benchmarks/baseline.json``.
 
-Headline ratios (all higher-is-better percentages):
+Headline ratios (all higher-is-better):
 
 * ``session_reuse_min_gap_pct``      — cold->warm binary gap floor
   (executable-cache amortization; paper init-opt floor 7.5 %).
@@ -21,6 +21,9 @@ Headline ratios (all higher-is-better percentages):
   hand-off at the highest packet count.
 * ``dag_pipeline_min_gain_pct``      — dependency-aware DAG dispatch
   gain over level-barrier dispatch at the top packet count.
+* ``fleet_slo_min_attainment``       — the deadline fleet router's
+  minimum SLO attainment over the stressed offered loads (a fraction in
+  [0, 1], not a percentage).
 
 Baseline values are committed *derated* from locally measured numbers so
 the gate trips on real regressions, not container noise.
@@ -28,7 +31,7 @@ the gate trips on real regressions, not container noise.
 Usage:
   python benchmarks/trend.py --session-reuse sr.json --offload-modes om.json
       --transfer-overlap to.json --sched-overhead so.json
-      --dag-pipeline dag.json
+      --dag-pipeline dag.json --fleet-slo fleet.json
       [--baseline benchmarks/baseline.json]
       [--out BENCH_PR.json] [--tolerance 0.10]
 """
@@ -41,7 +44,7 @@ import sys
 
 
 def headline_metrics(sr: dict, om: dict, to: dict, so: dict,
-                     dag: dict) -> dict:
+                     dag: dict, fleet: dict) -> dict:
     return {
         "session_reuse_min_gap_pct": sr["min_gap_pct"],
         "offload_modes_best_gap_pct": max(
@@ -50,6 +53,7 @@ def headline_metrics(sr: dict, om: dict, to: dict, so: dict,
         "transfer_overlap_min_gain_pct": to["min_gain_pct"],
         "sched_overhead_min_gain_pct": so["min_gain_pct"],
         "dag_pipeline_min_gain_pct": dag["min_gain_pct"],
+        "fleet_slo_min_attainment": fleet["min_attainment"],
     }
 
 
@@ -60,6 +64,7 @@ def main(argv=None) -> int:
     ap.add_argument("--transfer-overlap", required=True)
     ap.add_argument("--sched-overhead", required=True)
     ap.add_argument("--dag-pipeline", required=True)
+    ap.add_argument("--fleet-slo", required=True)
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--out", default="BENCH_PR.json")
     ap.add_argument("--tolerance", type=float, default=0.10,
@@ -71,14 +76,16 @@ def main(argv=None) -> int:
                       ("offload_modes", args.offload_modes),
                       ("transfer_overlap", args.transfer_overlap),
                       ("sched_overhead", args.sched_overhead),
-                      ("dag_pipeline", args.dag_pipeline)):
+                      ("dag_pipeline", args.dag_pipeline),
+                      ("fleet_slo", args.fleet_slo)):
         raw[key] = json.loads(pathlib.Path(path).read_text())
     baseline = json.loads(pathlib.Path(args.baseline).read_text())
 
     metrics = headline_metrics(raw["session_reuse"], raw["offload_modes"],
                                raw["transfer_overlap"],
                                raw["sched_overhead"],
-                               raw["dag_pipeline"])
+                               raw["dag_pipeline"],
+                               raw["fleet_slo"])
     failures = []
     for name, base in baseline["metrics"].items():
         if name not in metrics:

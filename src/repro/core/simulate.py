@@ -500,6 +500,39 @@ def simulate_dag(nodes: Sequence[SimNode], devices: Sequence[SimDevice],
 # ---------------------------------------------------------------------------
 
 @dataclass
+class ServeSimState:
+    """Carry-over state for incremental serving simulation (the fleet
+    router's co-simulation hook).
+
+    A fleet-level driver places requests epoch by epoch and needs each
+    replica's ``simulate_serving`` to *resume* — device clocks, online
+    power estimates, the pipeline fill and the jitter stream must carry
+    across calls, or chunked execution would diverge from a one-shot run.
+    Obtain one from ``ServeSimResult.state`` and pass it back via
+    ``simulate_serving(..., resume=state)``.  ``residual_wg(now)`` is the
+    measured outstanding work the router's EWMA tracks.
+    """
+    free: List[float]                      # per-device clock (busy until)
+    busy: List[float]                      # cumulative busy time
+    swait: List[float]                     # cumulative modeled sched wait
+    dead: List[bool]
+    first_pkt: List[bool]                  # pipeline fill paid?
+    powers: List[float]                    # online EWMA power estimates
+    now: float = 0.0
+    rounds: int = 0
+    rng: Optional[object] = None           # jitter stream (random.Random)
+
+    def residual_wg(self, now: float) -> float:
+        """In-flight work (wg) still queued on surviving device clocks."""
+        return sum(max(f - now, 0.0) * p
+                   for f, p, d in zip(self.free, self.powers, self.dead)
+                   if not d)
+
+    def alive_power(self) -> float:
+        return sum(p for p, d in zip(self.powers, self.dead) if not d)
+
+
+@dataclass
 class ServeSimResult:
     requests: List                         # the input requests, accounting filled
     duration: float                        # last completion / shed time
@@ -508,13 +541,19 @@ class ServeSimResult:
     all_dead: bool = False                 # every device failed mid-stream
     # per-device modeled scheduler hand-off wait, summed across rounds
     sched_wait: List[float] = field(default_factory=list)
+    # carry-over hook: pass back as resume= to continue this fleet's
+    # timeline with more requests (fleet co-simulation)
+    state: Optional[ServeSimState] = None
 
 
 def simulate_serving(requests: Sequence, lws: int,
                      devices: Sequence[SimDevice], cfg: SimConfig, *,
                      policy: str = "shed",
                      batch_window_s: float = 0.0,
-                     round_quantum_s: float = math.inf) -> ServeSimResult:
+                     round_quantum_s: float = math.inf,
+                     admission=None,
+                     resume: Optional[ServeSimState] = None
+                     ) -> ServeSimResult:
     """Open-loop serving against calibrated device models.
 
     ``requests`` are ``repro.serve.workload.Request``-shaped objects (duck
@@ -526,29 +565,56 @@ def simulate_serving(requests: Sequence, lws: int,
     the cross-round EWMA powers.  Devices keep simulate()'s failure /
     straggler / jitter / transfer model, so the same serving policies can be
     stress-tested at 1000-replica scale in milliseconds.
+
+    Router-policy hooks (the fleet subsystem's attachment points):
+
+    * ``admission`` — an injected policy object with the
+      ``EdfAdmission.admit`` contract (serve/admission.py).  When given it
+      replaces the inline EDF + quantum + shed procedure, so the threaded
+      server, the fleet router and this simulator run the *same* decision
+      code.  With the matching config the hook path is bit-identical to
+      the inline one (locked by tests/test_admission.py).
+    * ``resume`` — a :class:`ServeSimState` from a previous call: device
+      clocks, EWMA powers, pipeline fill and jitter stream continue, so a
+      fleet driver can feed a replica its routed requests epoch by epoch.
+      The returned ``busy``/``sched_wait``/``rounds`` are then cumulative
+      over the resumed timeline.
     """
     import random
     assert policy in ("shed", "none")
-    rng = random.Random(cfg.seed)
     reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
     n = len(devices)
     policy_name = cfg.policy
     leased = cfg.dispatch == "leased"
     hand_off = cfg.hand_off_cost
-    swait = [0.0] * n
-    # cross-round power estimates: start from the (possibly biased) offline
-    # profile; rounds with an observing scheduler refine them online
-    powers = [d.throughput * d.profile_bias for d in devices]
-    free = [0.0] * n
-    busy = [0.0] * n
-    dead = [False] * n
+    if resume is not None:
+        if len(resume.free) != n:
+            raise ValueError(f"resume state has {len(resume.free)} devices, "
+                             f"got {n}")
+        st = resume
+        rng = st.rng if st.rng is not None else random.Random(cfg.seed)
+    else:
+        st = ServeSimState(
+            free=[0.0] * n, busy=[0.0] * n, swait=[0.0] * n,
+            dead=[False] * n, first_pkt=[True] * n,
+            # cross-round power estimates: start from the (possibly
+            # biased) offline profile; rounds with an observing scheduler
+            # refine them online
+            powers=[d.throughput * d.profile_bias for d in devices])
+        rng = random.Random(cfg.seed)
+    st.rng = rng
+    swait = st.swait
+    powers = st.powers
+    free = st.free
+    busy = st.busy
+    dead = st.dead
     # pipeline fill: with pooled buffers the arena persists across rounds,
     # so a device pays the stage-in fill once per serve, not once per round
-    first_pkt = [True] * n
-    now = 0.0
+    first_pkt = st.first_pkt
+    now = st.now
     i_next = 0
     pending: List = []
-    rounds = 0
+    rounds = st.rounds
     all_dead = False
 
     def alive() -> List[int]:
@@ -578,26 +644,35 @@ def simulate_serving(requests: Sequence, lws: int,
         # without it the predictor only sees THIS round's queue and admits
         # doomed requests under backlog
         resid = sum(max(free[i] - now, 0.0) * powers[i] for i in alive())
-        # round quantum (iteration-level scheduling): admit only ~one
-        # quantum of EDF-first work per round, so under backlog the server
-        # re-sorts, re-predicts and re-sheds frequently instead of
-        # committing the whole queue to one long round
-        cap_wg = total_p * round_quantum_s
-        admitted: List = []
-        leftover: List = []
-        cum = 0.0
-        for r in pending:
-            if admitted and cum + r.size > cap_wg:
-                leftover.append(r)
-                continue
-            cum += r.size
-            if (policy == "shed"
-                    and now + (resid + cum) / total_p > r.deadline):
-                r.shed = True
-                cum -= r.size
-            else:
-                admitted.append(r)
-        pending = leftover
+        if admission is not None:
+            # injected policy object (serve/admission.py): the exact
+            # decision procedure the threaded server and the fleet router
+            # run — bit-identical to the inline path below with the
+            # matching config (tests/test_admission.py locks it)
+            admitted, pending = admission.admit(
+                pending, now, total_power=total_p, residual_wg=resid,
+                calibrated=True)
+        else:
+            # round quantum (iteration-level scheduling): admit only ~one
+            # quantum of EDF-first work per round, so under backlog the
+            # server re-sorts, re-predicts and re-sheds frequently instead
+            # of committing the whole queue to one long round
+            cap_wg = total_p * round_quantum_s
+            admitted = []
+            leftover: List = []
+            cum = 0.0
+            for r in pending:
+                if admitted and cum + r.size > cap_wg:
+                    leftover.append(r)
+                    continue
+                cum += r.size
+                if (policy == "shed"
+                        and now + (resid + cum) / total_p > r.deadline):
+                    r.shed = True
+                    cum -= r.size
+                else:
+                    admitted.append(r)
+            pending = leftover
         if not admitted:
             continue
         rounds += 1
@@ -709,8 +784,11 @@ def simulate_serving(requests: Sequence, lws: int,
             nxt = min(free[g] for g in alive()) if alive() else now
             now = max(now, nxt)
 
+    st.now = now
+    st.rounds = rounds
     fins = [r.finish for r in reqs if r.finish is not None]
     duration = max(fins) if fins else now
     return ServeSimResult(requests=reqs, duration=duration,
-                          device_busy=busy, rounds=rounds,
-                          all_dead=all_dead, sched_wait=swait)
+                          device_busy=list(busy), rounds=rounds,
+                          all_dead=all_dead, sched_wait=list(swait),
+                          state=st)

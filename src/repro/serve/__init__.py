@@ -6,16 +6,19 @@ accounting path (stats.py).  The discrete-event twin lives in
 core/simulate.py::simulate_serving and reuses the same Request objects,
 schedulers and metrics at 1000-replica scale.
 """
+from repro.serve.admission import AdmissionConfig, EdfAdmission
 from repro.serve.replica import Replica
 from repro.serve.server import CoexecServer, ServeOutcome, ServerConfig
 from repro.serve.stats import ServeStats, percentile, summarize
 from repro.serve.workload import (ARRIVALS, Request, RequestQueue,
-                                  bursty_arrivals, make_requests,
-                                  poisson_arrivals, trace_arrivals)
+                                  TraceWorkload, bursty_arrivals,
+                                  make_requests, poisson_arrivals,
+                                  record_trace, trace_arrivals)
 
 __all__ = [
-    "ARRIVALS", "CoexecServer", "Replica", "Request", "RequestQueue",
-    "ServeOutcome", "ServeStats", "ServerConfig", "bursty_arrivals",
-    "make_requests", "percentile", "poisson_arrivals", "summarize",
+    "ARRIVALS", "AdmissionConfig", "CoexecServer", "EdfAdmission",
+    "Replica", "Request", "RequestQueue", "ServeOutcome", "ServeStats",
+    "ServerConfig", "TraceWorkload", "bursty_arrivals", "make_requests",
+    "percentile", "poisson_arrivals", "record_trace", "summarize",
     "trace_arrivals",
 ]

@@ -40,6 +40,7 @@ from repro.api.session import EngineSession
 from repro.core.device import DeviceGroup
 from repro.core.runtime import Program
 from repro.core.scheduler import rotate_static_order, scheduler_accepts
+from repro.serve.admission import AdmissionConfig, EdfAdmission
 from repro.serve.replica import Replica
 from repro.serve.stats import ServeStats, summarize
 from repro.serve.workload import Request, RequestQueue
@@ -96,6 +97,13 @@ class CoexecServer:
         # so the dispatch groups themselves are unthrottled — the session
         # must not throttle a second time.
         self._by_name = {r.name: r for r in self.replicas}
+        # admission is a shared policy object (serve/admission.py): the
+        # same EDF + shed/degrade procedure the fleet router runs one rung
+        # up.  unit_work: the threaded server prices every request at one
+        # work-group, matching the requests/s scale of its EWMA powers.
+        self.admission = EdfAdmission(AdmissionConfig(
+            policy=cfg.policy, gen=cfg.gen, min_gen=cfg.min_gen,
+            round_quantum_s=cfg.round_quantum_s, unit_work=True))
         self.session = EngineSession(
             [DeviceGroup(r.name) for r in self.replicas],
             scheduler=cfg.scheduler, dispatch=cfg.dispatch,
@@ -107,51 +115,17 @@ class CoexecServer:
                ) -> Tuple[List[Request], List[Request]]:
         """EDF-order ``pending``; shed/degrade predicted misses in place.
 
-        Returns (admitted round, leftover beyond the round quantum) — the
-        leftover stays queued so EDF re-sorting / re-prediction happens
-        every quantum instead of once per backlog (iteration-level
-        scheduling).  The threaded server treats every request as one unit
-        of work (``Request.size`` is a simulator concept), matching the
-        requests/s scale of its EWMA powers.
+        Thin wrapper over the shared :class:`EdfAdmission` policy object
+        (serve/admission.py — also the fleet router's admitter).  Returns
+        (admitted round, leftover beyond the round quantum) — the leftover
+        stays queued so EDF re-sorting / re-prediction happens every
+        quantum instead of once per backlog (iteration-level scheduling).
         """
-        pending.sort(key=lambda r: (r.deadline, r.rid))
-        for r in pending:
-            r.gen_alloc = self.cfg.gen
-        calibrated = self._calibrated and self.cfg.policy != "none"
-        total_p = sum(self._power.values())
-        cap_reqs = (total_p * self.cfg.round_quantum_s
-                    if total_p > 0 else float("inf"))
-        admitted: List[Request] = []
-        leftover: List[Request] = []
-        cum = 0.0
-        for r in pending:
-            if admitted and cum + 1 > cap_reqs:
-                leftover.append(r)
-                continue
-            cum += 1
-            if not calibrated or total_p <= 0:
-                admitted.append(r)
-                continue
-            pred_finish = now + cum / total_p
-            if pred_finish <= r.deadline:
-                admitted.append(r)
-                continue
-            if self.cfg.policy == "degrade":
-                # degrade never drops: scale the generation budget to the
-                # remaining slack, down to min_gen for already-late work
-                slack = r.deadline - now
-                frac = (slack / (pred_finish - now)
-                        if slack > 0 else 0.0)
-                r.gen_alloc = max(self.cfg.min_gen,
-                                  int(self.cfg.gen * frac))
-                r.degraded = r.gen_alloc < self.cfg.gen
-                admitted.append(r)
-            else:
-                r.shed = True
-                r.finish = None
-                completed.append(r)
-                cum -= 1                # shed work frees the queue behind it
-        return admitted, leftover
+        return self.admission.admit(
+            pending, now,
+            total_power=sum(self._power.values()),
+            calibrated=self._calibrated,
+            completed=completed)
 
     # -- dispatch ------------------------------------------------------------
     def _run_round(self, admitted: List[Request], now: float, t0: float,

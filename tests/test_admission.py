@@ -1,0 +1,195 @@
+"""EDF admission extraction: the shared policy object must reproduce the
+inline procedures it replaced, at both attachment points.
+
+* unit behavior: EDF ordering, quantum leftover, shed/degrade/none
+  policies, calibration gate, residual-aware prediction;
+* regression lock (simulator): ``simulate_serving(..., admission=...)``
+  with the matching config is BIT-IDENTICAL to the inline path — same
+  finish, shed and replica on every request;
+* regression lock (server semantics): with ``unit_work=True`` the object
+  makes exactly the decisions the old ``CoexecServer._admit`` made
+  (shed bookkeeping through ``completed``, degrade token scaling).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.simulate import SimConfig, SimDevice, simulate_serving
+from repro.serve import (AdmissionConfig, EdfAdmission, make_requests,
+                         poisson_arrivals)
+from repro.serve.admission import sequence_total
+from repro.serve.workload import Request
+
+
+def _req(rid, arrival, deadline, size=1):
+    return Request(rid=rid, arrival=arrival, deadline=deadline, size=size)
+
+
+# ------------------------------------------------------------------ config
+
+def test_bad_policy_rejected():
+    with pytest.raises(ValueError, match="admission policy"):
+        AdmissionConfig(policy="drop")
+    with pytest.raises(ValueError):
+        EdfAdmission(policy="yolo")
+
+
+def test_kwargs_constructor_matches_config():
+    a = EdfAdmission(policy="degrade", gen=8, min_gen=2)
+    assert a.cfg == AdmissionConfig(policy="degrade", gen=8, min_gen=2)
+
+
+# ------------------------------------------------------------ unit behavior
+
+def test_edf_order_and_gen_reset():
+    adm = EdfAdmission(policy="none", gen=4)
+    pending = [_req(0, 0.0, 9.0), _req(1, 0.0, 1.0), _req(2, 0.0, 5.0)]
+    admitted, leftover = adm.admit(pending, 0.0, total_power=1.0)
+    assert [r.rid for r in admitted] == [1, 2, 0]
+    assert leftover == []
+    assert all(r.gen_alloc == 4 for r in admitted)
+
+
+def test_quantum_leftover_and_first_fit():
+    # power 1 wg/s, quantum 2 s => 2 wg per round; the first request
+    # always admits even if it alone exceeds the cap
+    adm = EdfAdmission(policy="none", round_quantum_s=2.0)
+    pending = [_req(0, 0.0, 100.0, size=5), _req(1, 0.0, 101.0, size=1),
+               _req(2, 0.0, 102.0, size=1)]
+    admitted, leftover = adm.admit(pending, 0.0, total_power=1.0)
+    assert [r.rid for r in admitted] == [0]
+    assert [r.rid for r in leftover] == [1, 2]
+
+
+def test_uncalibrated_admits_everything():
+    adm = EdfAdmission(policy="shed")
+    pending = [_req(0, 0.0, 1e-9, size=100)]      # hopeless deadline
+    admitted, _ = adm.admit(pending, 0.0, total_power=1.0,
+                            calibrated=False)
+    assert [r.rid for r in admitted] == [0]
+    assert not admitted[0].shed
+
+
+def test_shed_frees_queue_behind_and_completed_bookkeeping():
+    # power 1 wg/s: r0 (10 wg, deadline 1s) is doomed; shedding it must
+    # let r1 (1 wg, deadline 2s) admit — and the shed request moves to
+    # completed with finish=None (the threaded server's contract)
+    adm = EdfAdmission(policy="shed")
+    completed = []
+    pending = [_req(0, 0.0, 1.0, size=10), _req(1, 0.0, 2.0, size=1)]
+    admitted, _ = adm.admit(pending, 0.0, total_power=1.0,
+                            completed=completed)
+    assert [r.rid for r in admitted] == [1]
+    assert not admitted[0].shed
+    assert [r.rid for r in completed] == [0]
+    assert completed[0].shed and completed[0].finish is None
+
+
+def test_residual_pushes_predictions_out():
+    adm = EdfAdmission(policy="shed")
+    pending = [_req(0, 0.0, 2.0, size=1)]
+    admitted, _ = adm.admit(pending, 0.0, total_power=1.0)
+    assert admitted and not pending[0].shed       # 1s < 2s: feasible
+    pending = [_req(1, 0.0, 2.0, size=1)]
+    admitted, _ = adm.admit(pending, 0.0, total_power=1.0,
+                            residual_wg=5.0)      # 6s > 2s: doomed
+    assert admitted == [] and pending[0].shed
+
+
+def test_degrade_scales_generation_never_drops():
+    # old _admit math: slack=1, pred-now=2 => frac 0.5 => gen 8 of 16
+    adm = EdfAdmission(policy="degrade", gen=16, min_gen=1, unit_work=True)
+    pending = [_req(0, 0.0, 1.0), _req(1, 0.0, 1.0)]
+    admitted, _ = adm.admit(pending, 0.0, total_power=1.0)
+    assert [r.rid for r in admitted] == [0, 1]
+    assert admitted[0].gen_alloc == 16 and not admitted[0].degraded
+    assert admitted[1].gen_alloc == 8 and admitted[1].degraded
+    # already-late work floors at min_gen, never sheds
+    late = [_req(2, 0.0, -1.0)]
+    admitted, _ = adm.admit(late, 0.0, total_power=1.0)
+    assert admitted[0].gen_alloc == 1 and admitted[0].degraded
+
+
+def test_unit_work_vs_size_pricing():
+    pending = [_req(0, 0.0, 3.0, size=100)]
+    # unit pricing: 1 unit / 1 power = 1s < 3s => admit
+    adm_u = EdfAdmission(policy="shed", unit_work=True)
+    admitted, _ = adm_u.admit(pending, 0.0, total_power=1.0)
+    assert admitted and not pending[0].shed
+    # size pricing: 100 wg / 1 wg/s = 100s > 3s => shed
+    pending = [_req(1, 0.0, 3.0, size=100)]
+    adm_s = EdfAdmission(policy="shed", unit_work=False)
+    admitted, _ = adm_s.admit(pending, 0.0, total_power=1.0)
+    assert admitted == [] and pending[0].shed
+
+
+def test_zero_power_admits_unfiltered():
+    adm = EdfAdmission(policy="shed", round_quantum_s=0.5)
+    pending = [_req(0, 0.0, 1e-9, size=9), _req(1, 0.0, 1e-9, size=9)]
+    admitted, leftover = adm.admit(pending, 0.0, total_power=0.0)
+    assert len(admitted) == 2 and leftover == []
+    assert not any(r.shed for r in admitted)
+
+
+def test_sequence_total():
+    reqs = [_req(0, 0, 1, size=3), _req(1, 0, 1, size=4)]
+    assert sequence_total(reqs, unit_work=True) == 2.0
+    assert sequence_total(reqs, unit_work=False) == 7.0
+
+
+# ------------------------------------- simulator hook: bit-identical lock
+
+def _fleet(seed=0):
+    return [
+        SimDevice("cpu", 30.0, launch_overhead=1e-3, jitter=0.05),
+        SimDevice("gpu", 100.0, launch_overhead=1e-3, jitter=0.05,
+                  profile_bias=0.8),
+        SimDevice("igpu", 55.0, launch_overhead=1e-3, jitter=0.05),
+    ]
+
+
+@pytest.mark.parametrize("quantum", [math.inf, 0.08])
+@pytest.mark.parametrize("sched", ["hguided_opt", "static"])
+def test_sim_admission_hook_bit_identical(sched, quantum):
+    rng = np.random.default_rng(3)
+    arrivals = poisson_arrivals(250, 260.0, rng)   # ~1.4x fleet capacity
+
+    def run(admission):
+        reqs = make_requests(arrivals, slo=0.15, size=1)
+        cfg = SimConfig(scheduler=sched, opt_init=True, opt_buffers=True,
+                        host_cost_per_packet=1e-4, seed=7)
+        res = simulate_serving(reqs, 1, _fleet(), cfg, policy="shed",
+                               batch_window_s=0.02,
+                               round_quantum_s=quantum,
+                               admission=admission)
+        return reqs, res
+
+    inline_reqs, inline_res = run(None)
+    hook = EdfAdmission(policy="shed", round_quantum_s=quantum,
+                        unit_work=False)
+    hook_reqs, hook_res = run(hook)
+
+    assert inline_res.rounds == hook_res.rounds
+    assert any(r.shed for r in inline_reqs)       # the lock is non-trivial
+    for a, b in zip(inline_reqs, hook_reqs):
+        assert (a.rid, a.shed, a.finish, a.replica) \
+            == (b.rid, b.shed, b.finish, b.replica)
+
+
+def test_sim_admission_none_policy_identical():
+    rng = np.random.default_rng(1)
+    arrivals = poisson_arrivals(120, 80.0, rng)
+
+    def run(admission, policy):
+        reqs = make_requests(arrivals, slo=0.5, size=1)
+        cfg = SimConfig(scheduler="hguided_opt", opt_init=True,
+                        opt_buffers=True, seed=2)
+        simulate_serving(reqs, 1, _fleet(), cfg, policy=policy,
+                         admission=admission)
+        return reqs
+
+    inline = run(None, "none")
+    hooked = run(EdfAdmission(policy="none"), "none")
+    for a, b in zip(inline, hooked):
+        assert (a.shed, a.finish, a.replica) == (b.shed, b.finish, b.replica)

@@ -1,0 +1,280 @@
+"""Elastic membership under load: ``add_device`` / ``remove_device``
+interleaved with in-flight submits.
+
+The session contract these tests lock:
+
+  (a) membership edits NEVER touch a run already dispatched — the device
+      list is snapshotted at dispatch, so a mid-flight join/leave changes
+      neither the packet cover nor a bit of the output;
+  (b) the NEXT submit sees the edited fleet (new groups get packets,
+      removed groups get none);
+  (c) degenerate edits fail loudly: duplicate joins raise, and a fleet
+      emptied of devices refuses new work instead of hanging.
+
+The threaded fleet tier rides the same hooks: ReplicaWorker.activate /
+deactivate and a FleetServer round-trip with a standby worker.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import EngineSession
+from repro.core.device import DeviceGroup
+from repro.core.runtime import Program
+
+WIDTH = 8
+
+
+def _program(name, G, lws=4, *, started=None, release=None, seed=0):
+    """Rows of a seeded random matrix; optionally gate the FIRST packet
+    on ``release`` (set ``started`` when execution begins) so the main
+    thread can edit membership while the run is provably in flight."""
+    base = np.random.default_rng(seed).random((G, WIDTH), dtype=np.float32)
+
+    def build(dev):
+        def run(offset, size):
+            if started is not None:
+                started.set()
+            if release is not None:
+                assert release.wait(timeout=30.0)
+            return base[offset:offset + size]
+        return run
+
+    prog = Program(name=name, total_work=G, lws=lws, build=build,
+                   out_rows_per_wg=1, out_cols=WIDTH,
+                   out_dtype=np.float32)
+    return prog, base
+
+
+def assert_exact_cover(packets, G):
+    spans = sorted((p.offset, p.offset + p.size) for p in packets)
+    cursor = 0
+    for a, b in spans:
+        assert a == cursor, f"gap/overlap at {a} (expected {cursor})"
+        cursor = b
+    assert cursor == G
+
+
+def _devices(n):
+    return [DeviceGroup(f"d{i}") for i in range(n)]
+
+
+# ------------------------------------------------------ membership edits
+
+def test_duplicate_add_raises():
+    with EngineSession(_devices(2), name="elastic-dup") as s:
+        with pytest.raises(ValueError, match="already in session"):
+            s.add_device(DeviceGroup("d1"))
+        assert [d.name for d in s.devices] == ["d0", "d1"]
+
+
+def test_remove_all_devices_rejects_new_work():
+    with EngineSession(_devices(2), name="elastic-empty") as s:
+        s.remove_device("d0")
+        s.remove_device("d1")
+        assert s.devices == []
+        prog, _ = _program("orphan", 16)
+        h = s.submit(prog, cache=False)
+        with pytest.raises(RuntimeError, match="no live devices"):
+            h.result(timeout=30)
+
+
+def test_remove_purges_device_caches():
+    with EngineSession(_devices(2), name="elastic-purge") as s:
+        prog, base = _program("warm", 16)
+        res = s.submit(prog, cache=True).result(timeout=30)
+        np.testing.assert_array_equal(res.output, base)
+        assert any(k[1] == "d1" for k in s.executables)
+        s.remove_device("d1")
+        assert not any(k[1] == "d1" for k in s.executables)
+        assert not any(k[1] == "d1" for k in s.buffer_registry)
+
+
+# ------------------------------------------- edits while a run is in flight
+
+def test_add_device_midflight_uses_dispatch_snapshot():
+    started, release = threading.Event(), threading.Event()
+    with EngineSession(_devices(2), scheduler="static",
+                       name="elastic-add") as s:
+        prog, base = _program("inflight", 32, started=started,
+                              release=release)
+        h = s.submit(prog, cache=False)
+        assert started.wait(timeout=30.0)    # provably mid-run
+        s.add_device(DeviceGroup("late"))
+        release.set()
+        res = h.result(timeout=60)
+        # (a) the in-flight run is untouched by the join
+        assert len(res.device_busy) == 2
+        assert_exact_cover(res.packets, 32)
+        np.testing.assert_array_equal(res.output, base)
+        # (b) the next submit runs on the grown fleet, newcomer included
+        # (equal powers: the static carve gives a never-measured device
+        # nothing by default)
+        prog2, base2 = _program("after", 32, seed=1)
+        res2 = s.submit(prog2, cache=False,
+                        powers=[1.0, 1.0, 1.0]).result(timeout=60)
+        assert len(res2.device_busy) == 3
+        assert 2 in {p.device for p in res2.packets}
+        assert_exact_cover(res2.packets, 32)
+        np.testing.assert_array_equal(res2.output, base2)
+
+
+def test_remove_device_midflight_run_unaffected():
+    started, release = threading.Event(), threading.Event()
+    with EngineSession(_devices(3), scheduler="static",
+                       name="elastic-rm") as s:
+        prog, base = _program("inflight", 48, started=started,
+                              release=release)
+        h = s.submit(prog, cache=False)
+        assert started.wait(timeout=30.0)
+        s.remove_device("d2")                # leave mid-run
+        release.set()
+        res = h.result(timeout=60)
+        # the dispatched snapshot kept all three: full cover, exact output
+        assert len(res.device_busy) == 3
+        assert_exact_cover(res.packets, 48)
+        np.testing.assert_array_equal(res.output, base)
+        # new work runs on the shrunk fleet only
+        prog2, base2 = _program("after", 48, seed=2)
+        res2 = s.submit(prog2, cache=False).result(timeout=60)
+        assert len(res2.device_busy) == 2
+        assert {p.device for p in res2.packets} <= {0, 1}
+        assert_exact_cover(res2.packets, 48)
+        np.testing.assert_array_equal(res2.output, base2)
+
+
+def test_membership_churn_across_dag_chain():
+    """A dependency chain whose feed hooks join/leave devices between
+    stages: every stage still tiles exactly and matches its oracle, and
+    each stage's dispatch snapshot reflects the membership at ITS start."""
+    edits = {1: lambda s: s.add_device(DeviceGroup("x0")),
+             2: lambda s: s.remove_device("d1"),
+             3: lambda s: s.add_device(DeviceGroup("x1"))}
+    expected_fleet = {0: 2, 1: 3, 2: 2, 3: 3}
+    with EngineSession(_devices(2), scheduler="static",
+                       name="elastic-dag") as s:
+        progs, handles = [], []
+        for i in range(4):
+            prog, base = _program(f"n{i}", 32, seed=10 + i)
+            progs.append((prog, base))
+            deps = [handles[-1]] if handles else []
+            edit = edits.get(i)
+            feed = (lambda _deps, e=edit: e(s)) if edit else None
+            handles.append(s.submit(prog, deps=deps, feed=feed,
+                                    cache=False))
+        results = [h.result(timeout=120) for h in handles]
+    for i, ((prog, base), res) in enumerate(zip(progs, results)):
+        assert len(res.device_busy) == expected_fleet[i], f"stage {i}"
+        assert_exact_cover(res.packets, 32)
+        np.testing.assert_array_equal(res.output, base)
+
+
+def test_concurrent_submits_straddle_an_edit():
+    """Two overlapping in-flight runs and an edit between their
+    dispatches: each run keeps its own snapshot."""
+    s1, r1 = threading.Event(), threading.Event()
+    s2, r2 = threading.Event(), threading.Event()
+    with EngineSession(_devices(2), scheduler="static", max_inflight=2,
+                       name="elastic-straddle") as s:
+        p1, b1 = _program("first", 32, started=s1, release=r1)
+        h1 = s.submit(p1, cache=False)
+        assert s1.wait(timeout=30.0)
+        s.add_device(DeviceGroup("mid"))     # lands between dispatches
+        p2, b2 = _program("second", 32, started=s2, release=r2, seed=3)
+        h2 = s.submit(p2, cache=False)
+        assert s2.wait(timeout=30.0)
+        r1.set()
+        r2.set()
+        res1, res2 = h1.result(timeout=60), h2.result(timeout=60)
+    assert len(res1.device_busy) == 2 and len(res2.device_busy) == 3
+    for res, base in ((res1, b1), (res2, b2)):
+        assert_exact_cover(res.packets, 32)
+        np.testing.assert_array_equal(res.output, base)
+
+
+# --------------------------------------------------- threaded fleet tier
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    import jax
+    from repro.configs import get_smoke
+    from repro.models import transformer as T
+    cfg = get_smoke("llama3.2-1b")
+    params, _ = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (8, 16)).astype(np.int32)
+    return cfg, params, prompts
+
+
+def _worker(name, smoke_model, power=4.0):
+    from repro.fleet import ReplicaWorker
+    from repro.serve import Replica, ServerConfig
+    cfg, params, _ = smoke_model
+    scfg = ServerConfig(scheduler="hguided_deadline", lws=2, gen=2)
+    return ReplicaWorker(name, [Replica(name + ".a", cfg, params)], scfg,
+                         declared_power=power)
+
+
+def test_worker_activate_deactivate_toggles_session(smoke_model):
+    w = _worker("w0", smoke_model)
+    try:
+        assert [d.name for d in w.server.session.devices] == ["w0.a"]
+        w.deactivate()
+        assert w.server.session.devices == []
+        w.activate()
+        assert [d.name for d in w.server.session.devices] == ["w0.a"]
+        with pytest.raises(ValueError, match="already in session"):
+            w.server.session.add_device(DeviceGroup("w0.a"))
+    finally:
+        w.stop()
+
+
+def test_fleet_server_round_trip_matches_solo(smoke_model):
+    from repro.fleet import FleetServer, RouterConfig
+    from repro.serve import (CoexecServer, Replica, RequestQueue,
+                             ServerConfig, make_requests)
+    cfg, params, prompts = smoke_model
+
+    def reqs():
+        return make_requests([0.0] * len(prompts), slo=300.0,
+                             prompt_fn=lambda i: prompts[i])
+
+    fleet = FleetServer([_worker("w0", smoke_model),
+                         _worker("w1", smoke_model)],
+                        RouterConfig(placement="least_residual",
+                                     admit="none"))
+    out = fleet.run(RequestQueue(reqs()))
+    assert out.stats.served == len(prompts) and out.stats.shed == 0
+
+    solo = CoexecServer([Replica("solo", cfg, params)],
+                        ServerConfig(scheduler="hguided_deadline", lws=2,
+                                     gen=2, policy="none"))
+    try:
+        ref = solo.run(RequestQueue(reqs()))
+    finally:
+        solo.close()
+
+    assert set(out.results) == set(ref.results)
+    for rid in ref.results:
+        np.testing.assert_array_equal(out.results[rid], ref.results[rid])
+    # dispatch is namespaced per worker and accounts for every request
+    assert all(":" in k for k in out.stats.dispatch)
+    assert sum(out.stats.dispatch.values()) == len(prompts)
+
+
+def test_fleet_server_standby_worker_serves_nothing(smoke_model):
+    from repro.fleet import FleetServer, RouterConfig
+    from repro.serve import RequestQueue, make_requests
+    _, _, prompts = smoke_model
+    reqs = make_requests([0.0] * len(prompts), slo=300.0,
+                         prompt_fn=lambda i: prompts[i])
+    spare = _worker("spare", smoke_model, power=50.0)
+    fleet = FleetServer([_worker("w0", smoke_model), spare],
+                        RouterConfig(placement="least_residual",
+                                     admit="none"),
+                        standby=["spare"])
+    assert spare.server.session.devices == []    # detached at init
+    out = fleet.run(RequestQueue(reqs))
+    assert out.stats.served == len(prompts)
+    assert not any(k.startswith("spare:") for k in out.stats.dispatch)

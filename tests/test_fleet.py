@@ -1,0 +1,458 @@
+"""Fleet tier: placement registry + policies, elastic autoscaler state
+machine, FleetRouter decisions, and the epoch co-simulation's invariants
+(exact request cover, determinism, trace replay, resume bit-identity,
+co-sim vs one-shot cross-check)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.simulate import SimConfig, SimDevice, simulate_serving
+from repro.fleet import (AutoscaleConfig, ElasticAutoscaler, FleetRouter,
+                         PLACEMENTS, PlacementPolicy, ReplicaState,
+                         RouterConfig, SimReplica, available_placements,
+                         crosscheck_fleet, make_placement,
+                         placement_accepts, placement_spec,
+                         register_placement, simulate_fleet,
+                         unregister_placement)
+from repro.serve import (TraceWorkload, make_requests, poisson_arrivals,
+                         record_trace)
+from repro.serve.workload import Request
+
+
+def _req(rid, arrival, deadline, size=1):
+    return Request(rid=rid, arrival=arrival, deadline=deadline, size=size)
+
+
+def _states(*powers, now=0.0):
+    return [ReplicaState(name=f"rep{i}", power0=p, last_t=now)
+            for i, p in enumerate(powers)]
+
+
+# ---------------------------------------------------------------- registry
+
+def test_builtin_placements_registered():
+    assert set(available_placements()) >= {
+        "round_robin", "static", "power_prop", "least_residual", "deadline"}
+    assert set(PLACEMENTS) == set(available_placements())
+
+
+def test_registry_contract_mirrors_schedulers():
+    class MyPlacement(PlacementPolicy):
+        def __init__(self, pin=0):
+            self.pin = pin
+
+        def place(self, req, now, states):
+            return self.pin
+
+    register_placement("pin", MyPlacement, defaults={"pin": 1})
+    try:
+        assert placement_spec("pin").cls is MyPlacement
+        assert placement_accepts("pin", "pin")
+        assert not placement_accepts("pin", "nope")
+        p = make_placement("pin")
+        assert p.pin == 1                    # defaults applied
+        assert make_placement("pin", pin=2).pin == 2
+        with pytest.raises(ValueError, match="already registered"):
+            register_placement("pin", MyPlacement)
+        register_placement("pin", MyPlacement, overwrite=True)
+    finally:
+        unregister_placement("pin")
+    assert "pin" not in available_placements()
+    with pytest.raises(KeyError, match="unknown placement"):
+        make_placement("pin")
+
+
+def test_register_rejects_non_policy():
+    with pytest.raises(TypeError):
+        register_placement("bad", dict)
+
+
+# ------------------------------------------------------------ ReplicaState
+
+def test_replica_state_drains_at_service_rate():
+    s = ReplicaState("a", power0=10.0)
+    s.resid = 5.0
+    s.drain(0.3)                             # 3 wg served
+    assert s.resid == pytest.approx(2.0)
+    s.drain(10.0)
+    assert s.resid == 0.0                    # floors at zero
+    assert s.pred_finish(10.0, 20.0) == pytest.approx(12.0)
+
+
+def test_replica_state_warmup_gates_ready():
+    s = ReplicaState("a", power0=1.0, warm_at=1.0)
+    assert not s.ready(0.5) and s.ready(1.0)
+    s.active = False
+    assert not s.ready(2.0)
+
+
+# --------------------------------------------------------------- placements
+
+def test_round_robin_cycles_ready_only():
+    pol = make_placement("round_robin")
+    states = _states(1.0, 1.0, 1.0)
+    states[1].active = False
+    picks = [pol.place(_req(i, 0, 1), 0.0, states) for i in range(4)]
+    assert picks == [0, 2, 0, 2]
+
+
+def test_static_shares_follow_declared_powers():
+    pol = make_placement("static")
+    states = _states(3.0, 1.0)
+    states[0].power = 0.01                   # live estimate must be ignored
+    picks = [pol.place(_req(i, 0, 1), 0.0, states) for i in range(400)]
+    assert picks.count(0) == 300 and picks.count(1) == 100
+
+
+def test_power_prop_follows_live_powers():
+    pol = make_placement("power_prop")
+    states = _states(3.0, 1.0)
+    states[0].power = 1.0                    # measured: actually equal
+    states[1].power = 1.0
+    picks = [pol.place(_req(i, 0, 1), 0.0, states) for i in range(400)]
+    assert picks.count(0) == 200 and picks.count(1) == 200
+
+
+def test_least_residual_joins_shortest_queue():
+    pol = make_placement("least_residual")
+    states = _states(1.0, 1.0)
+    states[0].resid = 5.0
+    assert pol.place(_req(0, 0, 99), 0.0, states) == 1
+    states[1].resid = 9.0
+    assert pol.place(_req(1, 0, 99), 0.0, states) == 0
+
+
+def test_deadline_places_earliest_finish_and_sheds_infeasible():
+    pol = make_placement("deadline")
+    states = _states(2.0, 1.0)
+    states[0].resid = 10.0                   # finish at 5+size/2
+    # rep1 empty: finish at size/1 = 4 < rep0's 7 => rep1 wins despite
+    # lower power
+    assert pol.place(_req(0, 0.0, 100.0, size=4), 0.0, states) == 1
+    # no replica makes a 1s deadline => shed at the router
+    r = _req(1, 0.0, 1.0, size=4)
+    assert pol.place(r, 0.0, states) is None
+    assert states[1].shed_for == 1
+    # shed=False places anyway (degrade-style fleets)
+    keep = make_placement("deadline", shed=False)
+    assert keep.place(_req(2, 0.0, 1.0, size=4), 0.0, states) == 1
+
+
+def test_warming_fleet_falls_back_to_active_set():
+    pol = make_placement("least_residual")
+    states = _states(1.0, 1.0)
+    states[0].active = False
+    states[1].warm_at = 5.0                  # active but still warming
+    assert pol.place(_req(0, 0, 99), 0.0, states) == 1
+
+
+# --------------------------------------------------------------- autoscaler
+
+def _asc(**kw):
+    base = dict(target_delay_s=1.0, breach_s=0.5, idle_delay_s=0.1,
+                idle_s=0.5, warmup_s=0.2, cooldown_s=0.3, payback=2.0,
+                min_replicas=1)
+    base.update(kw)
+    return ElasticAutoscaler(AutoscaleConfig(**base))
+
+
+def test_scale_up_needs_sustained_breach():
+    asc = _asc()
+    states = _states(1.0, 1.0)
+    states[1].active = False
+    states[0].resid = 10.0                   # delay 10 >> target 1
+    assert asc.step(0.0, states) is None     # dwell starts
+    assert asc.step(0.4, states) is None     # 0.4 < breach_s
+    ev = asc.step(0.6, states)
+    assert ev is not None and ev.action == "up" and ev.replica == "rep1"
+    assert states[1].active and states[1].warm_at == pytest.approx(0.8)
+    assert asc.warmup_cost_s == pytest.approx(0.2)
+
+
+def test_scale_up_picks_most_powerful_standby_and_respects_max():
+    asc = _asc(max_replicas=2)
+    states = _states(1.0, 2.0, 5.0)
+    states[1].active = False
+    states[2].active = False
+    states[0].resid = 50.0
+    ev = None
+    t = 0.0
+    while ev is None:
+        ev = asc.step(t, states)
+        t += 0.3
+    assert ev.replica == "rep2"              # strongest spare joins first
+    # fleet now at max_replicas: further breach never scales
+    states[0].resid = 500.0
+    for _ in range(10):
+        assert asc.step(t, states) is None
+        t += 0.3
+
+
+def test_transient_blip_resets_dwell():
+    asc = _asc()
+    states = _states(1.0, 1.0)
+    states[1].active = False
+    states[0].resid = 10.0
+    asc.step(0.0, states)                    # breach dwell starts
+    states[0].resid = 0.5                    # back in band
+    asc.step(0.3, states)                    # resets both dwells
+    states[0].resid = 10.0
+    assert asc.step(0.6, states) is None     # dwell restarted at 0.6
+    assert asc.step(1.2, states) is not None
+
+
+def test_scale_down_requires_idle_and_payback_residency():
+    asc = _asc()
+    states = _states(1.0, 1.0)
+    states[1].active = False
+    states[0].resid = 10.0
+    asc.step(0.0, states)
+    ev = asc.step(0.6, states)               # up at 0.6
+    assert ev and ev.action == "up"
+    states[0].resid = 0.0                    # instantly idle
+    # min residency = payback*warmup + cooldown = 0.7s after the join:
+    # idle dwell alone (0.5s) must NOT shrink the fleet yet
+    assert asc.step(0.7, states) is None
+    assert asc.step(1.25, states) is None    # 1.25 - 0.6 < 0.7? no: guard
+    ev = None
+    t = 1.4                                  # 0.8s resident: amortized
+    while ev is None and t < 3.0:
+        ev = asc.step(t, states)
+        t += 0.2
+    assert ev is not None and ev.action == "down"
+    assert asc.flaps() == 0                  # guards held: no flap
+    s = asc.summary()
+    assert s["ups"] == 1 and s["downs"] == 1
+
+
+def test_scale_down_respects_min_replicas():
+    asc = _asc(min_replicas=2)
+    states = _states(1.0, 1.0)
+    for t in (0.0, 0.6, 1.2, 5.0, 9.0):      # long, genuine idle
+        assert asc.step(t, states) is None   # 2 active == min: hold
+
+
+def test_queue_delay_inf_when_nothing_ready():
+    states = _states(1.0)
+    states[0].warm_at = 99.0
+    assert ElasticAutoscaler.queue_delay(0.0, states) == math.inf
+
+
+# ------------------------------------------------------------------ router
+
+def test_router_validates_construction():
+    with pytest.raises(ValueError, match="duplicate"):
+        FleetRouter([("a", 1.0), ("a", 2.0)])
+    with pytest.raises(ValueError, match="standby"):
+        FleetRouter([("a", 1.0)], standby=["ghost"])
+    with pytest.raises(ValueError, match="admit"):
+        FleetRouter([("a", 1.0)], RouterConfig(admit="degrade"))
+    with pytest.raises(KeyError):
+        FleetRouter([("a", 1.0)], RouterConfig(placement="nope"))
+
+
+def test_router_places_commits_and_predicts():
+    router = FleetRouter([("a", 2.0), ("b", 1.0)],
+                         RouterConfig(placement="least_residual"))
+    placed, leftover = router.route([_req(0, 0.0, 100.0, size=4)], 0.0)
+    assert leftover == [] and len(placed) == 1
+    idx = placed[0].replica
+    assert idx == 0                          # ties break to higher power
+    assert router.states[idx].resid == 4.0
+    assert router.states[idx].placed == 1
+    assert router.predicted[0] == pytest.approx(2.0)
+    assert placed[0].pred_finish == pytest.approx(2.0)
+
+
+def test_router_sheds_fleet_infeasible_at_admission():
+    router = FleetRouter([("a", 1.0)], RouterConfig(placement="static"))
+    doomed = _req(0, 0.0, 0.5, size=100)
+    placed, _ = router.route([doomed], 0.0)
+    assert placed[0].replica is None
+    assert doomed.shed and doomed.finish is None
+    assert router.shed == [doomed]
+    assert router.states[0].resid == 0.0     # shed work never commits
+
+
+def test_router_deadline_placement_sheds_per_replica_infeasible():
+    # fleet-aggregate prediction passes (2 wg/s total) but neither
+    # 1 wg/s replica alone can finish 4 wg by t=3 => placement sheds
+    router = FleetRouter([("a", 1.0), ("b", 1.0)],
+                         RouterConfig(placement="deadline"))
+    r = _req(0, 0.0, 3.0, size=4)
+    placed, _ = router.route([r], 0.0)
+    assert placed[0].replica is None and r.shed
+    assert len(router.shed) == 1
+
+
+def test_router_feedback_ewma_blend():
+    router = FleetRouter([("a", 4.0)], RouterConfig(ewma=0.5))
+    router.feedback(0, 0.0, measured_power=2.0)
+    assert router.states[0].power == pytest.approx(3.0)
+    router.states[0].resid = 2.0
+    router.states[0].last_t = 1.0
+    router.feedback(0, 1.0, measured_resid=6.0)
+    assert router.states[0].resid == pytest.approx(4.0)
+
+
+def test_router_standby_excluded_until_scaled_up():
+    router = FleetRouter([("a", 1.0), ("spare", 50.0)],
+                         RouterConfig(placement="least_residual"),
+                         standby=["spare"])
+    placed, _ = router.route([_req(0, 0.0, 1e9, size=1)], 0.0)
+    assert placed[0].replica == 0            # spare not placeable
+    assert router.fleet_power(0.0) == pytest.approx(1.0)
+
+
+# -------------------------------------------------------- fleet co-sim
+
+def _sim_cfg(seed=0):
+    return SimConfig(scheduler="hguided_opt", opt_init=True,
+                     opt_buffers=True, host_cost_per_packet=1e-4, seed=seed)
+
+
+def _fleet(n=3, jitter=0.05):
+    reps = []
+    for k in range(n):
+        devs = [SimDevice(f"rep{k}.d0", 40.0 + 10 * k, jitter=jitter,
+                          launch_overhead=1e-3),
+                SimDevice(f"rep{k}.d1", 20.0, jitter=jitter,
+                          launch_overhead=1e-3)]
+        reps.append(SimReplica(f"rep{k}", devs))
+    return reps
+
+
+def _workload(n=300, rate=120.0, slo=0.5, size=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return make_requests(poisson_arrivals(n, rate, rng), slo, size=size)
+
+
+def test_simulate_fleet_exact_request_cover():
+    reqs = _workload()
+    res = simulate_fleet(reqs, _fleet(), _sim_cfg(),
+                         RouterConfig(placement="deadline"), epoch_s=0.2)
+    # every offered request resolves exactly one way
+    for r in res.requests:
+        assert r.shed != (r.finish is not None)
+    routed_rids = sorted(r.rid for chunk in res.replica_requests.values()
+                         for r in chunk)
+    served_rids = sorted(r.rid for r in res.requests if not r.shed)
+    assert routed_rids == served_rids        # disjoint exact partition
+    assert len(res.router.shed) == sum(1 for r in res.requests if r.shed)
+    assert res.stats.n_requests == len(reqs)
+
+
+def test_simulate_fleet_deterministic():
+    a = simulate_fleet(_workload(seed=5), _fleet(), _sim_cfg(),
+                       RouterConfig(placement="least_residual"),
+                       epoch_s=0.15)
+    b = simulate_fleet(_workload(seed=5), _fleet(), _sim_cfg(),
+                       RouterConfig(placement="least_residual"),
+                       epoch_s=0.15)
+    for ra, rb in zip(a.requests, b.requests):
+        assert (ra.rid, ra.shed, ra.finish, ra.replica) \
+            == (rb.rid, rb.shed, rb.finish, rb.replica)
+
+
+def test_simulate_fleet_trace_replay_bit_identical(tmp_path):
+    """Record a fleet run, replay the trace through the same router and
+    fleet: bit-identical outcomes (the trace harness's core claim)."""
+    res = simulate_fleet(_workload(seed=2), _fleet(), _sim_cfg(),
+                         RouterConfig(placement="deadline"), epoch_s=0.2)
+    path = str(tmp_path / "fleet.jsonl")
+    n = record_trace(res, path)
+    assert n == len(res.requests)
+    replayed = TraceWorkload.load(path).requests()
+    res2 = simulate_fleet(replayed, _fleet(), _sim_cfg(),
+                          RouterConfig(placement="deadline"), epoch_s=0.2)
+    for a, b in zip(res.requests, res2.requests):
+        assert (a.rid, a.shed, a.finish, a.replica) \
+            == (b.rid, b.shed, b.finish, b.replica)
+
+
+def test_serve_resume_chunked_matches_one_shot():
+    """ServeSimState carry-over: splitting a request stream at a drain
+    point and resuming must reproduce the one-shot run bit-identically
+    (device clocks, EWMA powers, pipeline fill, jitter stream)."""
+    devs = [SimDevice("d0", 50.0, jitter=0.1, launch_overhead=1e-3),
+            SimDevice("d1", 25.0, jitter=0.1, launch_overhead=1e-3)]
+    rng = np.random.default_rng(4)
+    first = make_requests(poisson_arrivals(80, 60.0, rng), 0.6, size=1)
+    gap = first[-1].arrival + 5.0            # fleet fully drains
+    second = [Request(rid=100 + i, arrival=gap + a, deadline=gap + a + 0.6)
+              for i, a in enumerate(poisson_arrivals(80, 60.0, rng))]
+
+    def clone(rs):
+        return [Request(rid=r.rid, arrival=r.arrival, deadline=r.deadline,
+                        size=r.size) for r in rs]
+
+    one = clone(first) + clone(second)
+    res_one = simulate_serving(one, 1, devs, _sim_cfg(9), policy="shed")
+
+    devs2 = [SimDevice("d0", 50.0, jitter=0.1, launch_overhead=1e-3),
+             SimDevice("d1", 25.0, jitter=0.1, launch_overhead=1e-3)]
+    c1 = clone(first)
+    r1 = simulate_serving(c1, 1, devs2, _sim_cfg(9), policy="shed")
+    c2 = clone(second)
+    r2 = simulate_serving(c2, 1, devs2, _sim_cfg(9), policy="shed",
+                          resume=r1.state)
+    assert r2.rounds == res_one.rounds       # cumulative across the resume
+    chunked = {r.rid: r for r in c1 + c2}
+    for r in one:
+        c = chunked[r.rid]
+        assert (r.shed, r.finish, r.replica) == (c.shed, c.finish, c.replica)
+
+
+def test_serve_resume_rejects_device_mismatch():
+    devs = [SimDevice("d0", 50.0)]
+    reqs = _workload(n=10, rate=50.0)
+    res = simulate_serving(reqs, 1, devs, _sim_cfg(), policy="none")
+    with pytest.raises(ValueError, match="resume state"):
+        simulate_serving(_workload(n=10, rate=50.0), 1,
+                         [SimDevice("a", 1.0), SimDevice("b", 1.0)],
+                         _sim_cfg(), resume=res.state)
+
+
+def test_crosscheck_fleet_within_tolerance():
+    fleet = _fleet()
+    res = simulate_fleet(_workload(n=250, rate=100.0, seed=1), fleet,
+                         _sim_cfg(), RouterConfig(placement="deadline"),
+                         epoch_s=0.2)
+    cc = crosscheck_fleet(res, fleet, _sim_cfg())
+    assert 0.0 <= cc["cosim_attainment"] <= 1.0
+    assert cc["abs_diff"] <= 0.08
+
+
+def test_simulate_fleet_autoscales_on_burst():
+    rng = np.random.default_rng(0)
+    storm = poisson_arrivals(250, 260.0, rng)          # ~2x core capacity
+    tail0 = storm[-1] + 3.0
+    tail = [tail0 + 0.5 * k for k in range(8)]
+    reqs = make_requests(list(storm) + tail, 0.8, size=2)
+    fleet = _fleet(5)
+    standby = [rep.name for rep in fleet[3:]]
+    asc = ElasticAutoscaler(AutoscaleConfig(
+        target_delay_s=0.4, breach_s=0.1, idle_delay_s=0.05, idle_s=0.5,
+        warmup_s=0.1, cooldown_s=0.2, min_replicas=3))
+    res = simulate_fleet(reqs, fleet, _sim_cfg(),
+                         RouterConfig(placement="deadline"),
+                         autoscaler=asc, standby=standby, epoch_s=0.1)
+    s = asc.summary()
+    assert s["ups"] >= 1                     # breach grew the fleet
+    assert s["downs"] >= 1                   # idle tail shrank it
+    assert s["flaps"] == 0                   # and never thrashed
+    assert s["warmup_cost_s"] == pytest.approx(0.1 * s["ups"])
+    # scale events landed on the states: spares served real traffic
+    spare_traffic = sum(len(res.replica_requests[name])
+                        for name in standby)
+    assert spare_traffic > 0
+
+
+def test_simulate_fleet_rejects_bad_args():
+    with pytest.raises(ValueError, match="epoch_s"):
+        simulate_fleet([], _fleet(), _sim_cfg(), epoch_s=0.0)
+    reps = _fleet(2)
+    reps[1].name = reps[0].name
+    with pytest.raises(ValueError, match="duplicate"):
+        simulate_fleet([], reps, _sim_cfg())
