@@ -35,6 +35,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.simulate import SimConfig, SimDevice
+from repro.energy.model import PRESETS
 from repro.fleet import (AutoscaleConfig, ElasticAutoscaler, RouterConfig,
                          SimReplica, crosscheck_fleet, simulate_fleet)
 from repro.serve import ARRIVALS, make_requests
@@ -83,6 +84,9 @@ def make_fleet(seed: int, n: int = N_FLEET,
                 launch_overhead=2e-3,
                 jitter=0.08,
                 profile_bias=bias,
+                # joule accounting only: no placement in PLACEMENTS reads
+                # energy feedback, so routing decisions are unchanged
+                power_model=PRESETS["gpu" if j == 0 else "cpu"],
             ))
         reps.append(SimReplica(f"rep{i}", devs))
     s = rng.randrange(n)
@@ -118,6 +122,7 @@ def run_cell(placement: str, load_frac: float, *, n_requests: int,
         "slo_attainment": sum(s.slo_attainment for s in accs) / n,
         "goodput_wg_s": sum(s.goodput_wg_s for s in accs) / n,
         "shed_frac": sum(s.shed / s.n_requests for s in accs) / n,
+        "j_per_request": sum(s.j_per_request for s in accs) / n,
     }
 
 
@@ -239,6 +244,13 @@ def main(argv=None) -> int:
                          f"p99={c['p99']*1e3:4.0f}ms")
         table[placement] = row
         print(f"{placement:15s}" + "".join(f"{c:>24s}" for c in cells))
+
+    # informational: measured joules per served request (energy subsystem;
+    # accounting only — no placement here acts on energy feedback)
+    jreq = ", ".join(
+        f"load {ld:.2f}: {table['deadline'][f'{ld:.2f}']['j_per_request']:.1f}J"
+        for ld in loads)
+    print(f"deadline-router energy per request: {jreq}")
 
     # gate 1: the deadline router strictly beats the best static placement
     # wherever any static member is stressed (not already perfect)

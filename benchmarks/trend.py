@@ -2,13 +2,18 @@
 
 CI's ``bench-trend`` job runs ``session_reuse.py``, ``offload_modes.py
 --smoke``, ``transfer_overlap.py --smoke``, ``sched_overhead.py
---smoke``, ``dag_pipeline.py --smoke`` and ``fleet_slo.py --smoke`` with
-``--json``, then calls this script to (a) merge the
-result files into one ``BENCH_PR.json`` artifact and (b) fail the job if
-any **headline ratio** regresses more than ``--tolerance`` (default
-10 %) below the committed ``benchmarks/baseline.json``.
+--smoke``, ``dag_pipeline.py --smoke``, ``fleet_slo.py --smoke`` and
+``energy_pareto.py --smoke`` with ``--json``, then calls this script to
+(a) merge the result files into one ``BENCH_PR.json`` artifact and
+(b) fail the job if any **headline ratio** regresses more than
+``--tolerance`` (default 10 %) below the committed
+``benchmarks/baseline.json``.
 
-Headline ratios (all higher-is-better):
+Gates are rows in the declarative ``GATES`` table below — one entry per
+benchmark: its CLI flag, merged-results key, headline metric name, and
+an extractor from the benchmark's ``--json`` payload.  Adding a
+benchmark to the trend gate is one table row plus one ``baseline.json``
+entry.  All headline ratios are higher-is-better:
 
 * ``session_reuse_min_gap_pct``      — cold->warm binary gap floor
   (executable-cache amortization; paper init-opt floor 7.5 %).
@@ -24,6 +29,9 @@ Headline ratios (all higher-is-better):
 * ``fleet_slo_min_attainment``       — the deadline fleet router's
   minimum SLO attainment over the stressed offered loads (a fraction in
   [0, 1], not a percentage).
+* ``energy_pareto_min_dominance``    — worst-case relative joule saving
+  of the ``hguided_energy`` budget frontier over the best time-only
+  scheduler, across the deadline-slack grid (fraction in [0, 1]).
 
 Baseline values are committed *derated* from locally measured numbers so
 the gate trips on real regressions, not container noise.
@@ -32,6 +40,7 @@ Usage:
   python benchmarks/trend.py --session-reuse sr.json --offload-modes om.json
       --transfer-overlap to.json --sched-overhead so.json
       --dag-pipeline dag.json --fleet-slo fleet.json
+      --energy-pareto energy.json
       [--baseline benchmarks/baseline.json]
       [--out BENCH_PR.json] [--tolerance 0.10]
 """
@@ -42,29 +51,37 @@ import json
 import pathlib
 import sys
 
+# (CLI flag, merged-results key, headline metric name, extractor).
+# Extractors read the benchmark's own --json payload; every metric is
+# higher-is-better and gated at baseline * (1 - tolerance).
+GATES = [
+    ("--session-reuse", "session_reuse", "session_reuse_min_gap_pct",
+     lambda d: d["min_gap_pct"]),
+    ("--offload-modes", "offload_modes", "offload_modes_best_gap_pct",
+     lambda d: max(s["gap_pct"] for s in d["sweeps"])),
+    ("--transfer-overlap", "transfer_overlap",
+     "transfer_overlap_min_gain_pct", lambda d: d["min_gain_pct"]),
+    ("--sched-overhead", "sched_overhead", "sched_overhead_min_gain_pct",
+     lambda d: d["min_gain_pct"]),
+    ("--dag-pipeline", "dag_pipeline", "dag_pipeline_min_gain_pct",
+     lambda d: d["min_gain_pct"]),
+    ("--fleet-slo", "fleet_slo", "fleet_slo_min_attainment",
+     lambda d: d["min_attainment"]),
+    ("--energy-pareto", "energy_pareto", "energy_pareto_min_dominance",
+     lambda d: d["min_dominance"]),
+]
 
-def headline_metrics(sr: dict, om: dict, to: dict, so: dict,
-                     dag: dict, fleet: dict) -> dict:
-    return {
-        "session_reuse_min_gap_pct": sr["min_gap_pct"],
-        "offload_modes_best_gap_pct": max(
-            s["gap_pct"] for s in om["sweeps"]
-        ),
-        "transfer_overlap_min_gain_pct": to["min_gain_pct"],
-        "sched_overhead_min_gain_pct": so["min_gain_pct"],
-        "dag_pipeline_min_gain_pct": dag["min_gain_pct"],
-        "fleet_slo_min_attainment": fleet["min_attainment"],
-    }
+
+def headline_metrics(raw: dict) -> dict:
+    """Extract every gate's headline ratio from the merged raw results."""
+    return {metric: extract(raw[key])
+            for _, key, metric, extract in GATES}
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--session-reuse", required=True)
-    ap.add_argument("--offload-modes", required=True)
-    ap.add_argument("--transfer-overlap", required=True)
-    ap.add_argument("--sched-overhead", required=True)
-    ap.add_argument("--dag-pipeline", required=True)
-    ap.add_argument("--fleet-slo", required=True)
+    for flag, _, _, _ in GATES:
+        ap.add_argument(flag, required=True)
     ap.add_argument("--baseline", default="benchmarks/baseline.json")
     ap.add_argument("--out", default="BENCH_PR.json")
     ap.add_argument("--tolerance", type=float, default=0.10,
@@ -72,20 +89,12 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     raw = {}
-    for key, path in (("session_reuse", args.session_reuse),
-                      ("offload_modes", args.offload_modes),
-                      ("transfer_overlap", args.transfer_overlap),
-                      ("sched_overhead", args.sched_overhead),
-                      ("dag_pipeline", args.dag_pipeline),
-                      ("fleet_slo", args.fleet_slo)):
+    for flag, key, _, _ in GATES:
+        path = getattr(args, flag.lstrip("-").replace("-", "_"))
         raw[key] = json.loads(pathlib.Path(path).read_text())
     baseline = json.loads(pathlib.Path(args.baseline).read_text())
 
-    metrics = headline_metrics(raw["session_reuse"], raw["offload_modes"],
-                               raw["transfer_overlap"],
-                               raw["sched_overhead"],
-                               raw["dag_pipeline"],
-                               raw["fleet_slo"])
+    metrics = headline_metrics(raw)
     failures = []
     for name, base in baseline["metrics"].items():
         if name not in metrics:

@@ -20,6 +20,8 @@ from typing import Any, Callable, Optional
 
 import jax
 
+from repro.energy.model import ZERO_POWER, PowerModel
+
 
 class DeviceFailure(RuntimeError):
     pass
@@ -32,6 +34,9 @@ class DeviceGroup:
     throttle: float = 1.0                 # >1 => proportionally slower
     fail_after: Optional[int] = None      # fail on the Nth packet
     ewma: float = 0.5
+    # energy model (busy/idle W, lock J, transfer J/byte); the all-zero
+    # default keeps every joule-blind config bit-identical (energy == 0)
+    power_model: PowerModel = ZERO_POWER
 
     # runtime state
     packets_done: int = 0

@@ -14,6 +14,8 @@ import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
+from repro.energy.meter import EnergyReport
+
 
 @dataclass(frozen=True)
 class PhaseBreakdown:
@@ -83,6 +85,16 @@ class RunResult:
     # per-device time blocked on the scheduler hand-off (lock waits +
     # carves + steals); empty when the engine predates the lease API
     sched_wait_s: List[float] = field(default_factory=list)
+    # joule accounting (repro.energy): per-device busy/idle/lock/transfer
+    # energy integrated from the phase windows by the executor's
+    # EnergyMeter.  None only when an executor predates the energy
+    # subsystem; joule-blind (zero PowerModel) runs report total_j == 0.
+    energy: Optional[EnergyReport] = None
+
+    @property
+    def energy_j(self) -> float:
+        """Total joules of this run (0.0 for joule-blind models)."""
+        return self.energy.total_j if self.energy is not None else 0.0
 
     def __post_init__(self):
         if not self.retries:

@@ -75,6 +75,7 @@ from repro.core.membuf import BufferArena, BufferPolicy, TransferPipeline
 from repro.core.metrics import PhaseBreakdown, RunResult
 from repro.core.region import Region
 from repro.core.scheduler import DeviceProfile, SchedulerBase, make_scheduler
+from repro.energy.meter import EnergyMeter
 
 
 class PhaseClock:
@@ -382,12 +383,16 @@ class _RunContext:
                 output = np.zeros((out_rows, out_cols), prog.out_dtype)
         profiles = [DeviceProfile(d.name,
                                   (self.powers[i] if self.powers else
-                                   (d.throughput or 1.0 / d.throttle)))
+                                   (d.throughput or 1.0 / d.throttle)),
+                                  power_model=d.power_model)
                     for i, d in enumerate(self.devices)]
         # per-device commit logs: appended only by the owning device
         # thread (or the committer draining that device's stage-outs), so
         # the dispatch hot path never crosses a run-global lock
         executed_by: List[List] = [[] for _ in range(n)]
+        # per-device host<->device traffic (bytes) for the energy meter's
+        # transfer term; written only by the owning device thread
+        bytes_io: List[float] = [0.0] * n
         errors: List[BaseException] = []
         exec_lock = threading.Lock()      # rare paths: errors, collect
         state: Dict[str, Any] = {"sched": None, "commit_failed": 0}
@@ -496,6 +501,7 @@ class _RunContext:
                 in_src = np.empty(stage_bytes, np.uint8)
                 in_scratch = np.empty(stage_bytes, np.uint8)
             my_done = executed_by[i]
+            staged_in = False
             while True:
                 mark_roi()
                 pkt = pull(i)
@@ -517,6 +523,10 @@ class _RunContext:
                     else run_region.row_panel(pkt.offset, pkt.size)
                 if in_src is not None:
                     np.copyto(in_scratch, in_src)     # per-packet bulk copy
+                    bytes_io[i] += stage_bytes        # bulk re-stage, every pkt
+                elif not staged_in:
+                    bytes_io[i] += prog.in_bytes      # registered: once per dev
+                    staged_in = True
                 try:
                     res, wg_s = dev.run_packet(self._invoke(fn, pkt_region),
                                                pkt.offset, pkt.size)
@@ -549,6 +559,7 @@ class _RunContext:
                     r0 = pkt.offset * prog.out_rows_per_wg
                     r1 = (pkt.offset + pkt.size) * prog.out_rows_per_wg
                     res = np.asarray(res).reshape(r1 - r0, out_cols)
+                    bytes_io[i] += res.nbytes         # result readback
                     if self.registered_buffers:
                         output[r0:r1] = res           # in-place commit
                     else:
@@ -591,6 +602,7 @@ class _RunContext:
                     errors.append(e)
                     sched.mark_dead(i)
 
+            staged_in = False
             try:
                 staged = fetch_and_stage(i, fn)
             except Exception as e:
@@ -609,6 +621,9 @@ class _RunContext:
                         return
                     continue
                 pkt, call = staged
+                if not staged_in:
+                    bytes_io[i] += prog.in_bytes      # arena stage-in, once
+                    staged_in = True
                 mark_roi()
                 try:
                     res, wg_s = dev.run_packet(call, pkt.offset, pkt.size)
@@ -625,6 +640,7 @@ class _RunContext:
                         sched.observe(i, wg_s)
                     nbytes = (pkt.size * prog.out_rows_per_wg * out_cols
                               * itemsize)
+                    bytes_io[i] += nbytes             # result readback
                     pipe.stage_out(make_commit(i, pkt, res), nbytes)
                     sched.release(i)
                 except Exception as e:
@@ -753,16 +769,30 @@ class _RunContext:
             h2d_s=clock.between("compiled", "roi"),
             d2h_s=clock.between("drained", "assembled"),
         )
+        run_busy = [d.busy_time - b0 for d, b0 in
+                    zip(self.devices, t0_busy)]
+        # energy: each device is powered for the whole ROI window (idle
+        # watts bridge its stalls); a dead device only until it exited.
+        # Crossings come from the scheduler's per-device counters — the
+        # exact dispatch-path hand-offs this run paid for.
+        crossings = state["sched"].lock_crossings_by_device()
+        meter = EnergyMeter()
+        for i, d in enumerate(self.devices):
+            window = d.finish_time if d.dead else roi_time
+            meter.add(d.name, d.power_model,
+                      busy_s=min(max(run_busy[i], 0.0), window),
+                      window_s=window, crossings=crossings[i],
+                      bytes_moved=bytes_io[i])
         result = RunResult(
             total_time=roi_time,
-            device_busy=[d.busy_time - b0 for d, b0 in
-                         zip(self.devices, t0_busy)],
+            device_busy=run_busy,
             device_finish=[d.finish_time for d in self.devices],
             packets=packets,
             binary_time=clock.between("start", "end"),
             aborted_devices=sum(1 for d in self.devices if d.dead),
             phases=phases,
             sched_wait_s=state["sched"].sched_wait_s(),
+            energy=meter.report(),
         )
         result.output = output  # type: ignore[attr-defined]
         return result

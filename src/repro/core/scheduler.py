@@ -30,6 +30,13 @@ still accepted everywhere and means the legacy 1-D region at offset 0.
   sizes are additionally capped by the tightest remaining deadline slack
   (``update_slack``), shrinking toward ``lws`` as deadlines close in.
 
+* ``HGuidedEnergy`` — beyond-paper energy-capped variant: the deadline
+  scheduler's cap shape applied to joules — packets are carved so the
+  run's *predicted* energy (from the profiles'
+  :class:`repro.energy.model.PowerModel`) stays under a per-run
+  ``energy_budget_j``, degrading toward the most-efficient device when
+  the budget binds.
+
 * ``HGuidedSteal``   — beyond-paper "new load balancing algorithm": a
   deadline-capable HGuided that dispatches through *leased packet plans*
   (see below) and lets an idle device steal half the largest victim lease
@@ -84,6 +91,7 @@ from typing import (Callable, Deque, Dict, Iterable, List, Mapping,
                     Optional, Sequence, Tuple, Union)
 
 from repro.core.region import Region, as_region
+from repro.energy.model import PowerModel
 
 
 @dataclass(frozen=True)
@@ -109,6 +117,9 @@ class DeviceProfile:
     power: float                 # computing power P_i (work-groups / s)
     min_mult: int = 1            # m_i: min packet = m_i * lws
     k: float = 2.0               # k_i decay constant
+    # energy model of the device behind this profile (None = joule-blind):
+    # the energy-capped scheduler ranks devices by busy_w / power (J/wg)
+    power_model: Optional[PowerModel] = None
 
 
 @dataclass
@@ -204,6 +215,8 @@ class SchedulerBase:
         self._lease_lat: List[Optional[float]] = [None] * n
         self._outstanding: List[int] = [0] * n    # acquired, not released
         self._wait_s: List[float] = [0.0] * n     # time in dispatch calls
+        self._crossings: List[int] = [0] * n      # per-device lock crossings
+        self._dead: set = set()                   # devices seen by mark_dead
         self._retry_epoch = 0                     # bumped on every requeue
         self.stats = SchedStats()
 
@@ -215,6 +228,7 @@ class SchedulerBase:
         try:
             with self._lock:
                 self.stats.lock_crossings += 1
+                self._crossings[device] += 1
                 self.stats.next_packets += 1
                 self._outstanding[device] += 1
                 pkt = self._pop_retry_locked(device)
@@ -255,6 +269,7 @@ class SchedulerBase:
         try:
             with self._lock:
                 self.stats.lock_crossings += 1
+                self._crossings[device] += 1
                 if k is None:
                     k = self._adaptive_k_locked(device)
                 k = max(1, int(k))
@@ -294,6 +309,7 @@ class SchedulerBase:
         try:
             with self._lock:
                 self.stats.lock_crossings += 1
+                self._crossings[thief] += 1
                 victim = None
                 best = 0
                 for i, lease in enumerate(self._leases):
@@ -336,6 +352,7 @@ class SchedulerBase:
         device's unclaimed chunk via ``_release_dead_locked`` — otherwise
         that work is stranded and the run can never drain."""
         with self._lock:
+            self._dead.add(device)
             for pkt in self._leases[device].drain():
                 self._requeue_locked(pkt)
             self._release_dead_locked(device)
@@ -381,6 +398,13 @@ class SchedulerBase:
         """Per-device wall time spent inside dispatch-path scheduler
         calls (next_packet / lease / steal): lock waits + carve work."""
         return list(self._wait_s)
+
+    def lock_crossings_by_device(self) -> List[int]:
+        """Per-device global-lock crossings on the dispatch hot path
+        (next_packet / lease / steal).  Sums to
+        ``stats.lock_crossings``; the energy meter charges each
+        crossing at the crossing device's ``PowerModel.lock_j``."""
+        return list(self._crossings)
 
     def update_power(self, device: int, power: float) -> None:
         """Online power re-estimation hook (HGuidedOpt uses it)."""
@@ -564,7 +588,8 @@ def tuned_profiles(devices: Sequence[DeviceProfile]) -> List[DeviceProfile]:
     (m=30, k=1), mid (15, 1.5), weakest (1, 3.5); for n != 3 interpolate in
     rank space.  Single-k fallback (paper conclusion d) is k=2."""
     n = len(devices)
-    out = [DeviceProfile(d.name, d.power, d.min_mult, d.k) for d in devices]
+    out = [DeviceProfile(d.name, d.power, d.min_mult, d.k,
+                         power_model=d.power_model) for d in devices]
     if n == 1:
         out[0].min_mult, out[0].k = 1, 2.0
         return out
@@ -667,6 +692,125 @@ class HGuidedDeadlineScheduler(HGuidedOptScheduler):
         # device must still drain the queue, one minimal packet at a time
         cap = max(self.lws, self.lws * int(cap_wg // self.lws))
         return min(size, cap)
+
+
+class HGuidedEnergyScheduler(HGuidedDeadlineScheduler):
+    """Energy-capped HGuided for joule-constrained runs.
+
+    The deadline scheduler's slack cap, rotated into the energy
+    dimension: every carved packet's *predicted* joules are charged
+    against a per-run ``energy_budget_j``, and packets for inefficient
+    devices shrink as the budget's headroom burns down.
+
+    Per device the marginal cost is its busy efficiency
+    ``j_i = busy_w_i / P_i`` (J per work-group at full speed, from the
+    profile's :class:`repro.energy.model.PowerModel`).  The floor cost of
+    the remaining work is ``G_r * j_min`` — what it would cost if the
+    most-efficient alive device ran all of it.  The spendable *headroom*
+    is what the budget allows above that floor:
+
+        headroom = (budget - spent) - G_r * j_min
+        cap_i    = headroom * energy_fraction / (j_i - j_min)
+
+    The most-efficient device is never capped (its packets cost the
+    floor rate); every other device may burn at most a fraction of the
+    headroom per packet, so as the budget binds their packets shrink —
+    and once the headroom cannot afford even one ``lws`` packet above
+    the floor rate, the device is *denied fresh work outright*: it
+    retires from the run and the split degrades toward the
+    most-efficient device, which drains the tail alone.  (Shrinking
+    packets without denial would not shift work — a fast device pulling
+    ``lws``-sized packets still pulls at nearly full rate; only refusal
+    moves its share.)  This trades makespan for joules, exactly the
+    J-vs-s flip the green-computing survey measures.  The budget stays
+    a soft cap: predicted spend can overshoot by the packets already in
+    flight when it bound.  Drain stays guaranteed because the
+    most-efficient *alive* device is never denied (``mark_dead``
+    re-elects it), and retry packets are never refused.  With
+    ``energy_budget_j=None`` (or joule-blind profiles) it degenerates
+    to HGuidedDeadline exactly.
+
+    Deadline and energy caps compose: serving callers still feed
+    ``update_slack`` and both caps apply (the tighter one wins).
+    """
+
+    def __init__(self, total_work, lws, devices, ewma: float = 0.5,
+                 slack_fraction: float = 0.5,
+                 slack_s: Optional[float] = None,
+                 energy_budget_j: Optional[float] = None,
+                 energy_fraction: float = 0.5):
+        super().__init__(total_work, lws, devices, ewma=ewma,
+                         slack_fraction=slack_fraction, slack_s=slack_s)
+        assert 0.0 < energy_fraction <= 1.0
+        self.energy_budget_j = None if energy_budget_j is None \
+            else float(energy_budget_j)
+        self.energy_fraction = energy_fraction
+        self._spent_j = 0.0           # predicted joules charged at issue
+
+    def predicted_spend_j(self) -> float:
+        """Joules the issued packets are predicted to burn (requeued
+        packets are conservatively re-charged on re-issue)."""
+        with self._lock:
+            return self._spent_j
+
+    def _j_per_wg_locked(self, device: int) -> float:
+        d = self.devices[device]
+        pm = d.power_model
+        if pm is None or pm.busy_w <= 0:
+            return 0.0                # unmodeled device: cannot predict
+        return pm.busy_w / max(d.power, 1e-9)
+
+    def _min_j_per_wg_locked(self) -> float:
+        vals = [self._j_per_wg_locked(i) for i in range(len(self.devices))
+                if i not in self._dead]
+        vals = [v for v in vals if v > 0]
+        return min(vals) if vals else 0.0
+
+    def _allow_wg_locked(self, device: int) -> Optional[float]:
+        """Work-groups of headroom this device may burn per packet, or
+        None when it is exempt (no budget / most-efficient / unmodeled /
+        already dead)."""
+        budget = self.energy_budget_j
+        if budget is None or device in self._dead:
+            return None
+        j_d = self._j_per_wg_locked(device)
+        j_min = self._min_j_per_wg_locked()
+        if j_d <= 0 or j_min <= 0 or j_d <= j_min * (1 + 1e-12):
+            return None               # most-efficient (or unmodeled)
+        headroom = ((budget - self._spent_j)
+                    - self._remaining_locked() * j_min)
+        return max(0.0, headroom) * self.energy_fraction / (j_d - j_min)
+
+    def _cap_size(self, device: int, size: int) -> int:
+        size = super()._cap_size(device, size)     # deadline cap first
+        allow_wg = self._allow_wg_locked(device)
+        if allow_wg is None:
+            return size
+        cap = max(self.lws, self.lws * int(allow_wg // self.lws))
+        return min(size, cap)
+
+    def _charge_locked(self, device: int, size: int) -> None:
+        if self.energy_budget_j is not None:
+            self._spent_j += size * self._j_per_wg_locked(device)
+
+    def _carve(self, device: int) -> Optional[Packet]:
+        # deny-and-retire: when the headroom cannot afford even one
+        # ``lws`` packet above the floor rate, this device gets no fresh
+        # work — refusal (not shrinkage) is what actually moves its
+        # share onto the efficient device.  Retries are never refused.
+        allow_wg = self._allow_wg_locked(device)
+        if allow_wg is not None and allow_wg < self.lws:
+            return None
+        pkt = super()._carve(device)
+        if pkt is not None:
+            self._charge_locked(device, pkt.size)
+        return pkt
+
+    def _pop_retry_locked(self, device: int) -> Optional[Packet]:
+        pkt = super()._pop_retry_locked(device)
+        if pkt is not None:
+            self._charge_locked(device, pkt.size)
+        return pkt
 
 
 class HGuidedStealScheduler(HGuidedDeadlineScheduler):
@@ -852,6 +996,7 @@ register_scheduler("dynamic", DynamicScheduler)
 register_scheduler("hguided", HGuidedScheduler)
 register_scheduler("hguided_opt", HGuidedOptScheduler)
 register_scheduler("hguided_deadline", HGuidedDeadlineScheduler)
+register_scheduler("hguided_energy", HGuidedEnergyScheduler)
 register_scheduler("hguided_steal", HGuidedStealScheduler)
 
 

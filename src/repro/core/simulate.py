@@ -32,15 +32,35 @@ from __future__ import annotations
 import heapq
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, \
+    Tuple
 
 from repro.core.metrics import PhaseBreakdown, RunResult
 from repro.core.scheduler import (DeviceProfile, make_scheduler,
                                   rotate_static_order)
+from repro.energy.meter import EnergyMeter, EnergyReport
+from repro.energy.model import ZERO_POWER, PowerModel
 
 # fraction of the input set that is full-size read-only buffers, re-copied
 # per packet by the unoptimized buffer path
 BULK_COPY_FRACTION = 0.45
+
+
+class PacketCost(NamedTuple):
+    """One packet's modeled cost, with its busy/stall split exposed.
+
+    ``t`` is the wall time charged to the device's event timeline;
+    ``h2d``/``d2h`` are the unhidden transfer components of it (phase
+    observability).  ``busy_s`` is the slice of ``t`` the device spends
+    *executing* (launch + compute); ``stall_s`` is the rest — unhidden
+    transfer time the device waits out at idle watts.  The energy meter
+    reads the split directly instead of re-deriving it from the transfer
+    terms (``t == busy_s + stall_s`` exactly)."""
+    t: float
+    h2d: float
+    d2h: float
+    busy_s: float
+    stall_s: float
 
 
 @dataclass
@@ -62,15 +82,39 @@ class SimDevice:
     profile_bias: float = 1.0
     # per-packet multiplicative execution-time jitter (lognormal sigma)
     jitter: float = 0.0
+    # energy model (busy/idle W, lock J, transfer J/byte); all-zero default
+    # keeps every joule-blind config bit-identical with energy == 0
+    power_model: PowerModel = ZERO_POWER
+    # byte-traffic model for the transfer-energy term: a one-time stage-in
+    # footprint (the program's read-only inputs) plus per-work-group
+    # result bytes.  Zero-copy devices move no bytes under the
+    # registered/pooled policies (same rule as the time model).
+    stage_in_bytes: float = 0.0
+    xfer_bytes_per_wg: float = 0.0
+
+    def packet_bytes(self, size: int, policy: str, first: bool) -> float:
+        """Bytes moved host<->device by one packet under ``policy`` (the
+        energy meter's traffic term, mirroring the threaded loops): the
+        per-packet path bulk re-stages the full input footprint every
+        packet; registered/pooled stage it once per device and move only
+        the packet's own result bytes; zero-copy devices move nothing
+        except under the per-packet worst practice."""
+        if policy == "per_packet":
+            return self.stage_in_bytes + size * self.xfer_bytes_per_wg
+        if self.zero_copy:
+            return 0.0
+        return (self.stage_in_bytes if first else 0.0) \
+            + size * self.xfer_bytes_per_wg
 
     def packet_cost(self, offset: int, size: int, total: int, now: float,
-                    policy: str, first: bool = True
-                    ) -> Tuple[float, float, float]:
+                    policy: str, first: bool = True) -> PacketCost:
         """Per-packet cost under a buffer policy.
 
-        Returns ``(t, h2d_unhidden, d2h_unhidden)``: the wall time charged
-        to the device's event timeline plus the transfer components of it
-        that could NOT be hidden behind compute (phase observability).
+        Returns a :class:`PacketCost` ``(t, h2d_unhidden, d2h_unhidden,
+        busy_s, stall_s)``: the wall time charged to the device's event
+        timeline, the transfer components of it that could NOT be hidden
+        behind compute (phase observability), and the busy/stall split of
+        ``t`` (energy observability).
 
         * ``per_packet`` — every packet pays its range transfers PLUS the
           bulk re-copy of the full-size read-only inputs (the paper's
@@ -116,13 +160,13 @@ class SimDevice:
             # (many packets) far more than a single-device run (one packet)
             h2d = xin + BULK_COPY_FRACTION * self.transfer_in * total
             d2h = xout + BULK_COPY_FRACTION * self.transfer_out * total
-            return t + h2d + d2h, h2d, d2h
+            return PacketCost(t + h2d + d2h, h2d, d2h, t, h2d + d2h)
         if self.zero_copy:
             # shared-memory device: the registered/pooled paths are both
             # zero-copy — there is nothing to transfer or overlap
-            return t, 0.0, 0.0
+            return PacketCost(t, 0.0, 0.0, t, 0.0)
         if policy == "registered":
-            return t + xin + xout, xin, xout
+            return PacketCost(t + xin + xout, xin, xout, t, xin + xout)
         # pooled: double-buffered staging — steady-state transfers hide
         # behind the compute window; the pipeline fill (the first packet's
         # stage-in, which strictly precedes its own compute) cannot
@@ -135,7 +179,7 @@ class SimDevice:
             share = xin / (xin + xout) if (xin + xout) > 0 else 0.0
             h2d = over * share
             d2h = over - h2d
-        return t + h2d + d2h, h2d, d2h
+        return PacketCost(t + h2d + d2h, h2d, d2h, t, h2d + d2h)
 
     def packet_time(self, offset: int, size: int, total: int, now: float,
                     opt_buffers: bool) -> float:
@@ -210,7 +254,8 @@ def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
     policy = cfg.policy
     leased = cfg.dispatch == "leased"
     hand_off = cfg.hand_off_cost
-    profiles = [DeviceProfile(d.name, d.throughput * d.profile_bias)
+    profiles = [DeviceProfile(d.name, d.throughput * d.profile_bias,
+                              power_model=d.power_model)
                 for d in devices]
     sched = make_scheduler(cfg.scheduler, total_work, lws, profiles,
                            **cfg.scheduler_kwargs)
@@ -231,6 +276,8 @@ def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
     dead = [False] * n
     h2d_total = 0.0
     d2h_total = 0.0
+    cbusy = [0.0] * n                      # executing seconds (energy busy)
+    bytes_moved = [0.0] * n                # host<->device traffic (energy)
 
     host_free = 0.0
     while heap:
@@ -253,10 +300,12 @@ def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
         else:
             start = t
         swait[i] += start - t
-        base, h2d, d2h = d.packet_cost(pkt.offset, pkt.size, total_work,
-                                       start, policy, first[i])
+        was_first = first[i]
+        cost = d.packet_cost(pkt.offset, pkt.size, total_work,
+                             start, policy, first[i])
         first[i] = False
-        dt = base + (start - t)
+        raw_dt = cost.t + (start - t)
+        dt = raw_dt
         if d.jitter > 0:
             dt *= math.exp(rng.gauss(0.0, d.jitter))
         end = t + dt
@@ -276,8 +325,12 @@ def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
         busy[i] += dt
         finish[i] = end
         packets.append(pkt)
-        h2d_total += h2d
-        d2h_total += d2h
+        h2d_total += cost.h2d
+        d2h_total += cost.d2h
+        # energy: the jitter multiplier stretches the whole event, so the
+        # packet's busy slice stretches with it (same busy:stall ratio)
+        cbusy[i] += cost.busy_s * (dt / raw_dt if raw_dt > 0 else 1.0)
+        bytes_moved[i] += d.packet_bytes(pkt.size, policy, was_first)
         sched.note_packet_latency(i, dt)   # drives the adaptive lease size
         if hasattr(sched, "observe"):
             sched.observe(i, pkt.size / max(dt, 1e-12))
@@ -290,6 +343,18 @@ def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
     if n > 1:  # co-execution pays the host synchronization cost
         roi += cfg.sync_cost_optimized if cfg.opt_init else cfg.sync_cost
     init = cfg.init_cost_optimized if cfg.opt_init else cfg.init_cost
+    # energy: every device is powered for the whole ROI window (idle watts
+    # fill the gap between its busy seconds and the window); a dead device
+    # is powered only until its failure time.  Lock-crossing energy uses
+    # the scheduler's per-device crossing counters — the same counters the
+    # dispatch model charges wall time for.
+    crossings = sched.lock_crossings_by_device()
+    meter = EnergyMeter()
+    for i, d in enumerate(devices):
+        window = min(roi, d.fail_at) if dead[i] else roi
+        meter.add(d.name, d.power_model, busy_s=min(cbusy[i], window),
+                  window_s=window, crossings=crossings[i],
+                  bytes_moved=bytes_moved[i])
     # h2d/d2h are the UNHIDDEN transfer components already charged inside
     # the event timeline (the simulator's offload window == its ROI
     # window); under "pooled" the pipeline shrinks them toward the fill
@@ -299,7 +364,7 @@ def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
                      phases=PhaseBreakdown(init_s=init, offload_s=roi,
                                            roi_s=roi, h2d_s=h2d_total,
                                            d2h_s=d2h_total),
-                     sched_wait_s=swait)
+                     sched_wait_s=swait, energy=meter.report())
 
 
 def single_device_time(total_work: int, lws: int, device: SimDevice,
@@ -393,7 +458,8 @@ def simulate_dag(nodes: Sequence[SimNode], devices: Sequence[SimDevice],
     leased = cfg.dispatch == "leased"
     hand_off = cfg.hand_off_cost
     n_dev = len(devices)
-    profiles = [DeviceProfile(d.name, d.throughput * d.profile_bias)
+    profiles = [DeviceProfile(d.name, d.throughput * d.profile_bias,
+                              power_model=d.power_model)
                 for d in devices]
 
     finished: Dict[str, float] = {}
@@ -521,6 +587,11 @@ class ServeSimState:
     now: float = 0.0
     rounds: int = 0
     rng: Optional[object] = None           # jitter stream (random.Random)
+    # cumulative energy accounting (empty lists == zero-initialized; kept
+    # defaulted so pre-energy constructors keep working)
+    cbusy: List[float] = field(default_factory=list)   # executing seconds
+    crossings: List[int] = field(default_factory=list)
+    bytes_moved: List[float] = field(default_factory=list)
 
     def residual_wg(self, now: float) -> float:
         """In-flight work (wg) still queued on surviving device clocks."""
@@ -544,6 +615,15 @@ class ServeSimResult:
     # carry-over hook: pass back as resume= to continue this fleet's
     # timeline with more requests (fleet co-simulation)
     state: Optional[ServeSimState] = None
+    # joule accounting over the (cumulative, if resumed) timeline; None
+    # never happens from simulate_serving itself — kept Optional for
+    # hand-built results in tests
+    energy: Optional[EnergyReport] = None
+
+    @property
+    def energy_j(self) -> float:
+        """Total joules (0.0 for joule-blind power models)."""
+        return self.energy.total_j if self.energy is not None else 0.0
 
 
 def simulate_serving(requests: Sequence, lws: int,
@@ -603,6 +683,14 @@ def simulate_serving(requests: Sequence, lws: int,
             powers=[d.throughput * d.profile_bias for d in devices])
         rng = random.Random(cfg.seed)
     st.rng = rng
+    # zero-init the energy accumulators (resume states built before the
+    # energy fields existed arrive with empty lists)
+    if len(st.cbusy) != n:
+        st.cbusy = [0.0] * n
+    if len(st.crossings) != n:
+        st.crossings = [0] * n
+    if len(st.bytes_moved) != n:
+        st.bytes_moved = [0.0] * n
     swait = st.swait
     powers = st.powers
     free = st.free
@@ -682,7 +770,9 @@ def simulate_serving(requests: Sequence, lws: int,
         wg_owner: List[int] = []           # work-group offset -> request idx
         for j, r in enumerate(admitted):
             wg_owner.extend([j] * r.size)
-        profiles = [DeviceProfile(devices[g].name, powers[g]) for g in amap]
+        profiles = [DeviceProfile(devices[g].name, powers[g],
+                                  power_model=devices[g].power_model)
+                    for g in amap]
         skw = dict(cfg.scheduler_kwargs)
         order = rotate_static_order(cfg.scheduler, len(amap), rounds)
         if order is not None:
@@ -726,9 +816,12 @@ def simulate_serving(requests: Sequence, lws: int,
             else:
                 start = t
             swait[g] += start - t
-            dt = d.packet_cost(pkt.offset, pkt.size, G, start, policy_name,
-                               first_pkt[g])[0] + (start - t)
+            was_first = first_pkt[g]
+            cost = d.packet_cost(pkt.offset, pkt.size, G, start, policy_name,
+                                 first_pkt[g])
             first_pkt[g] = False
+            raw_dt = cost.t + (start - t)
+            dt = raw_dt
             if d.jitter > 0:
                 dt *= math.exp(rng.gauss(0.0, d.jitter))
             end = t + dt
@@ -752,6 +845,9 @@ def simulate_serving(requests: Sequence, lws: int,
                 continue
             busy[g] += dt
             free[g] = end
+            st.cbusy[g] += cost.busy_s * (dt / raw_dt if raw_dt > 0 else 1.0)
+            st.bytes_moved[g] += d.packet_bytes(pkt.size, policy_name,
+                                                was_first)
             sched.note_packet_latency(ai, dt)
             if hasattr(sched, "observe"):
                 sched.observe(ai, pkt.size / max(dt, 1e-12))
@@ -772,6 +868,12 @@ def simulate_serving(requests: Sequence, lws: int,
             for j, r in enumerate(admitted):
                 if done_wg[j] < r.size:
                     r.shed = True
+        # energy: fold the round scheduler's per-device lock-crossing
+        # counters into the cumulative state (it indexes the round's
+        # alive map)
+        rc = sched.lock_crossings_by_device()
+        for ai, g in enumerate(amap):
+            st.crossings[g] += rc[ai]
         # carry the schedulers' online estimates into the next round's
         # profile (schedulers without observe leave them untouched — Static
         # keeps trusting its offline profile, and keeps paying for it)
@@ -788,7 +890,19 @@ def simulate_serving(requests: Sequence, lws: int,
     st.rounds = rounds
     fins = [r.finish for r in reqs if r.finish is not None]
     duration = max(fins) if fins else now
+    # energy: every device is powered for the whole serving window (idle
+    # watts bridge the arrival gaps); a dead device only until it failed.
+    # Cumulative over a resumed timeline, like busy/sched_wait.
+    end_t = max([duration, now]
+                + [f for f, dd in zip(free, dead) if not dd])
+    meter = EnergyMeter()
+    for g, d in enumerate(devices):
+        window = min(end_t, d.fail_at) if (dead[g] and d.fail_at is not None) \
+            else end_t
+        meter.add(d.name, d.power_model,
+                  busy_s=min(st.cbusy[g], window), window_s=window,
+                  crossings=st.crossings[g], bytes_moved=st.bytes_moved[g])
     return ServeSimResult(requests=reqs, duration=duration,
                           device_busy=list(busy), rounds=rounds,
                           all_dead=all_dead, sched_wait=list(swait),
-                          state=st)
+                          state=st, energy=meter.report())

@@ -28,6 +28,12 @@ Built-ins:
   replica predicted to *finish this request soonest*; if no replica can
   make the deadline, shed at the router so doomed work never displaces
   feasible work queued behind it.
+* ``energy``          — joule-aware deadline placement: among the replicas
+  predicted to MAKE the deadline, place on the one with the lowest
+  measured J/work-group (the ``j_wg`` EWMA fed back by the driver);
+  replicas without energy feedback yet, or infeasible requests, fall back
+  to the ``deadline`` behavior — so with joule-blind replicas the two
+  policies are identical.
 """
 from __future__ import annotations
 
@@ -58,6 +64,10 @@ class ReplicaState:
     last_t: float = 0.0                    # residual drain clock
     placed: int = 0                        # requests routed here
     shed_for: int = 0                      # sheds attributed at placement
+    # measured joules per work-group (EWMA from driver feedback); 0.0
+    # means "no energy feedback yet" — energy placement then treats the
+    # replica as cost-unknown and falls back to finish-time ordering
+    j_wg: float = 0.0
 
     def __post_init__(self):
         if self.power <= 0.0:
@@ -80,6 +90,11 @@ class ReplicaState:
     def pred_finish(self, now: float, size: float) -> float:
         """Predicted completion of a size-``size`` request placed now."""
         return now + (self.resid + size) / max(self.power, 1e-12)
+
+    def pred_joules(self, size: float) -> float:
+        """Predicted energy of a size-``size`` request here (0.0 while
+        the replica has no energy feedback)."""
+        return size * self.j_wg
 
 
 class PlacementPolicy:
@@ -202,6 +217,47 @@ class DeadlinePlacement(PlacementPolicy):
         return pick
 
 
+class EnergyPlacement(DeadlinePlacement):
+    """Joule-aware deadline placement: cheapest feasible replica wins.
+
+    The candidate set is restricted to replicas predicted to make the
+    request's deadline (plus ``slack_margin`` grace); among those the
+    request goes to the lowest predicted J/request (measured ``j_wg``
+    EWMA × size), ties to the earliest finisher.  Cold start is a
+    deterministic one-shot probe: a feasible replica with no energy
+    feedback AND no traffic yet gets the request, so every replica's
+    J/wg is measured before steady-state routing settles — without the
+    probe an idle efficient replica would never be discovered.  When NO
+    replica is feasible, behavior degrades to :class:`DeadlinePlacement`
+    exactly: shed at the router (``shed=True``) or place on the earliest
+    predicted finisher.  With joule-blind fleets every ``j_wg`` stays 0
+    and — after each replica's single probe placement, which
+    finish-order ties to the deadline pick anyway — the policy matches
+    ``deadline``.
+    """
+
+    def place(self, req, now, states):
+        ready = self._ready(now, states)
+        size = float(getattr(req, "size", 1))
+        feasible = [i for i in ready
+                    if states[i].pred_finish(now, size)
+                    <= req.deadline + self.slack_margin]
+        if not feasible:
+            return super().place(req, now, states)
+        unprobed = [i for i in feasible
+                    if states[i].j_wg <= 0 and states[i].placed == 0]
+        if unprobed:
+            return min(unprobed,
+                       key=lambda i: (states[i].pred_finish(now, size), i))
+        measured = [i for i in feasible if states[i].j_wg > 0]
+        if measured:
+            return min(measured,
+                       key=lambda i: (states[i].pred_joules(size),
+                                      states[i].pred_finish(now, size), i))
+        return min(feasible, key=lambda i: (states[i].pred_finish(now, size),
+                                            -states[i].power, i))
+
+
 # -- registry (mirrors core/scheduler.py's scheduler registry) ---------------
 
 @dataclass
@@ -279,3 +335,4 @@ register_placement("static", StaticPlacement)
 register_placement("power_prop", PowerPropPlacement)
 register_placement("least_residual", LeastResidualPlacement)
 register_placement("deadline", DeadlinePlacement)
+register_placement("energy", EnergyPlacement)

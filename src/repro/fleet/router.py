@@ -158,9 +158,12 @@ class FleetRouter:
     # -- measurement feedback ------------------------------------------------
     def feedback(self, idx: int, now: float, *,
                  measured_power: Optional[float] = None,
-                 measured_resid: Optional[float] = None) -> None:
-        """Blend a replica's measured capacity / outstanding work into the
-        router's EWMA book (the driver calls this per round or epoch)."""
+                 measured_resid: Optional[float] = None,
+                 measured_j_wg: Optional[float] = None) -> None:
+        """Blend a replica's measured capacity / outstanding work /
+        energy cost into the router's EWMA book (the driver calls this
+        per round or epoch).  ``measured_j_wg`` is the replica's joules
+        per work-group — the ``energy`` placement's routing signal."""
         a = self.cfg.ewma
         s = self.states[idx]
         s.drain(now)
@@ -168,6 +171,9 @@ class FleetRouter:
             s.power = a * measured_power + (1 - a) * s.power
         if measured_resid is not None:
             s.resid = a * max(measured_resid, 0.0) + (1 - a) * s.resid
+        if measured_j_wg is not None and measured_j_wg > 0:
+            s.j_wg = measured_j_wg if s.j_wg <= 0 else \
+                a * measured_j_wg + (1 - a) * s.j_wg
 
     def summary(self) -> dict:
         d = {

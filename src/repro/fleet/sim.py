@@ -111,17 +111,27 @@ def simulate_fleet(requests: Sequence, replicas: Sequence[SimReplica],
                 # the replica's whole device fleet died: it leaves the
                 # placement set for good, like a failed device in a run
                 router.states[k].active = False
-        # measured feedback: outstanding work on real device clocks and
-        # the schedulers' online power estimates, blended into the
-        # router's EWMA book (replicas with no traffic yet keep their
-        # declared profile)
+        # measured feedback: outstanding work on real device clocks, the
+        # schedulers' online power estimates, and the measured energy
+        # cost (cumulative joules over cumulative completed work — the
+        # ``energy`` placement's J/wg signal), blended into the router's
+        # EWMA book (replicas with no traffic yet keep their declared
+        # profile)
         for k in range(n):
             st = states[k]
             if st is None:
                 continue
+            jwg = None
+            res = last_res[k]
+            if res is not None and res.energy_j > 0:
+                done_wg = sum(r.size for r in routed_all[k]
+                              if r.finish is not None)
+                if done_wg > 0:
+                    jwg = res.energy_j / done_wg
             router.feedback(k, t_end,
                             measured_power=st.alive_power() or None,
-                            measured_resid=st.residual_wg(t_end))
+                            measured_resid=st.residual_wg(t_end),
+                            measured_j_wg=jwg)
 
     while i < len(reqs) or carry:
         t0 = reqs[i].arrival if i < len(reqs) else carry[0].arrival
@@ -153,7 +163,10 @@ def simulate_fleet(requests: Sequence, replicas: Sequence[SimReplica],
 
     duration = max((r.finish for r in reqs if r.finish is not None),
                    default=0.0)
-    stats = summarize(reqs, duration=duration or None)
+    # fleet energy: each replica's last (cumulative) report covers its
+    # whole resumed timeline, so the fleet total is a plain sum
+    fleet_j = sum(res.energy_j for res in last_res if res is not None)
+    stats = summarize(reqs, duration=duration or None, energy_j=fleet_j)
     return FleetSimResult(
         requests=reqs, stats=stats, router=router,
         replica_requests={replicas[k].name: routed_all[k]

@@ -40,6 +40,7 @@ from repro.api.session import EngineSession
 from repro.core.device import DeviceGroup
 from repro.core.runtime import Program
 from repro.core.scheduler import rotate_static_order, scheduler_accepts
+from repro.energy.model import ZERO_POWER, PowerModel
 from repro.serve.admission import AdmissionConfig, EdfAdmission
 from repro.serve.replica import Replica
 from repro.serve.stats import ServeStats, summarize
@@ -63,6 +64,10 @@ class ServerConfig:
     # packet plans; with scheduler="hguided_steal" idle replicas also
     # steal from the largest victim lease) or "per_packet" (baseline)
     dispatch: str = "leased"
+    # per-replica power models (name -> PowerModel) for joule accounting;
+    # unlisted replicas stay joule-blind (ZERO_POWER), so the default is
+    # a behavior- and stats-identical server with energy_j == 0
+    power_models: Dict[str, PowerModel] = field(default_factory=dict)
 
 
 def _no_collect(pkt, res, dev) -> None:
@@ -105,9 +110,13 @@ class CoexecServer:
             policy=cfg.policy, gen=cfg.gen, min_gen=cfg.min_gen,
             round_quantum_s=cfg.round_quantum_s, unit_work=True))
         self.session = EngineSession(
-            [DeviceGroup(r.name) for r in self.replicas],
+            [DeviceGroup(r.name,
+                         power_model=cfg.power_models.get(r.name,
+                                                          ZERO_POWER))
+             for r in self.replicas],
             scheduler=cfg.scheduler, dispatch=cfg.dispatch,
             name="coexec_server")
+        self._energy_j = 0.0          # joules across all dispatch rounds
 
     # -- admission -----------------------------------------------------------
     def _admit(self, pending: List[Request], now: float,
@@ -187,9 +196,10 @@ class CoexecServer:
         # BINARY offloads: each is self-contained (fresh build, teardown
         # after) — a round program never recurs, so nothing must survive it
         prog = Program(f"round{self._round}", len(admitted), cfg.lws, build)
-        self.session.submit(prog, powers=powers, scheduler=cfg.scheduler,
-                            scheduler_kwargs=skw, collect=_no_collect,
-                            mode=OffloadMode.BINARY).result()
+        res = self.session.submit(prog, powers=powers, scheduler=cfg.scheduler,
+                                  scheduler_kwargs=skw, collect=_no_collect,
+                                  mode=OffloadMode.BINARY).result()
+        self._energy_j += getattr(res, "energy_j", 0.0)
         self._calibrated = True
 
     # -- main entry ----------------------------------------------------------
@@ -239,7 +249,7 @@ class CoexecServer:
             self._run_round(admitted, now, t0, results, dispatch)
             completed.extend(admitted)
         stats = summarize(completed, duration=time.perf_counter() - t0,
-                          dispatch=dispatch)
+                          dispatch=dispatch, energy_j=self._energy_j)
         return ServeOutcome(stats=stats, requests=completed, results=results)
 
     def close(self) -> None:

@@ -49,17 +49,32 @@ class ServeStats:
     throughput_wg_s: float           # all served work-groups per second
     duration: float
     dispatch: Dict[str, int] = field(default_factory=dict)
+    # joule accounting (repro.energy): total energy the serving window
+    # burned; 0.0 for joule-blind power models or engines that predate
+    # the energy subsystem
+    energy_j: float = 0.0
+
+    @property
+    def j_per_request(self) -> float:
+        """Energy per served request (0.0 when nothing was served or the
+        fleet is joule-blind)."""
+        return self.energy_j / self.served if self.served else 0.0
 
     def row(self) -> str:
-        return (f"p50={self.p50_latency:.3f}s p99={self.p99_latency:.3f}s "
-                f"slo={self.slo_attainment:.3f} "
-                f"goodput={self.goodput_wg_s:.1f}wg/s "
-                f"shed={self.shed}/{self.n_requests} missed={self.missed}")
+        row = (f"p50={self.p50_latency:.3f}s p99={self.p99_latency:.3f}s "
+               f"slo={self.slo_attainment:.3f} "
+               f"goodput={self.goodput_wg_s:.1f}wg/s "
+               f"shed={self.shed}/{self.n_requests} missed={self.missed}")
+        if self.energy_j > 0:
+            row += (f" energy={self.energy_j:.1f}J "
+                    f"({self.j_per_request:.2f}J/req)")
+        return row
 
 
 def summarize(requests: Sequence[Request], *,
               duration: Optional[float] = None,
-              dispatch: Optional[Dict[str, int]] = None) -> ServeStats:
+              dispatch: Optional[Dict[str, int]] = None,
+              energy_j: float = 0.0) -> ServeStats:
     n = len(requests)
     served = [r for r in requests if not r.shed and r.finish is not None]
     lats = [r.latency for r in served]
@@ -83,4 +98,5 @@ def summarize(requests: Sequence[Request], *,
         throughput_wg_s=sum(r.size for r in served) / dur,
         duration=duration,
         dispatch=dict(dispatch or {}),
+        energy_j=energy_j,
     )
