@@ -1,0 +1,340 @@
+"""Multi-tenant fleet gate: fair share, exclusive isolation, solo parity.
+
+N tenant ``EngineSession``s share one device fleet through a
+``FleetArbiter``; this benchmark measures whether the arbitration layer
+actually delivers its three contracts, on the real threaded engine:
+
+1. **Fair share** — three saturated tenants with quota weights 2:1:1
+   run a backlog of submits over every registered scheduler.  At the
+   instant the weight-2 tenant finishes (while the others still have
+   backlog — the only moment shares are well-defined), each tenant's
+   executed work-groups must sit within ``SHARE_TOL`` of its quota.
+   The headline ``min_index`` is the worst, over all schedulers, of the
+   median fairness index across ``REPEATS`` trials (1.0 = exact
+   proportional share; the median absorbs scheduler-noise outliers on
+   shared runners).
+2. **Exclusive takeover** — an ``exclusive=True`` tenant arriving
+   mid-stream must overlap ZERO packets with the streaming co-tenants
+   (verified from the arbiter's per-packet device windows, not from the
+   grant bookkeeping) and its takeover latency is reported.
+3. **Solo parity** — a single-tenant arbiter session must produce
+   bit-identical output to a plain (pre-tenancy) session: the fast
+   path costs nothing when nobody shares.
+
+A ``simulate_multitenant`` cross-check replays the same policies in the
+discrete-event twin (work conservation + exclusive non-overlap there
+too), so regressions in either engine or model surface.
+
+    PYTHONPATH=src python benchmarks/tenant_fairness.py            # full
+    PYTHONPATH=src python benchmarks/tenant_fairness.py --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.api import (EngineSession, FleetArbiter, TenantConfig,
+                       exclusive_overlaps)
+from repro.core.device import DeviceGroup
+from repro.core.runtime import Program
+from repro.core.scheduler import available_schedulers
+from repro.core.simulate import (SimConfig, SimDevice, SimTenant,
+                                 simulate_multitenant)
+
+LWS = 4
+WIDTH = 16
+WEIGHTS = {"a": 2.0, "b": 1.0, "c": 1.0}
+SHARE_TOL = 0.10          # |share/quota - 1| per tenant at the snapshot
+REPEATS = 3               # fairness trials per scheduler (median gates)
+PACKET_DELAY_S = 5e-4     # per-packet compute floor: makes grant quanta
+                          # dominate python overhead, so shares measure
+                          # arbitration rather than interpreter noise
+
+
+def make_program(name: str, total: int, seed: int,
+                 delay_s: float = PACKET_DELAY_S) -> Tuple[Program,
+                                                           np.ndarray]:
+    """A uniquely-NAMED program per tenant/run.  Executable caches key by
+    (program.name, device.name), so tenants must not share names."""
+    base = np.random.default_rng(seed).random((total, WIDTH),
+                                              dtype=np.float32)
+
+    def build(dev):
+        def run(offset, size):
+            if delay_s:
+                time.sleep(delay_s)
+            return base[offset:offset + size] * np.float32(2.0)
+        return run
+
+    prog = Program(name=name, total_work=total, lws=LWS, build=build,
+                   out_rows_per_wg=1, out_cols=WIDTH,
+                   out_dtype=np.float32)
+    return prog, base
+
+
+def fleet_devices() -> List[DeviceGroup]:
+    return [DeviceGroup("gpu", throttle=1.0),
+            DeviceGroup("cpu", throttle=2.0)]
+
+
+def run_fairness(scheduler: str, runs: int, total: int) -> Dict:
+    """Three threaded tenant sessions, weights 2:1:1, saturated with a
+    ``runs``-deep submit backlog each; share snapshot at the weight-2
+    tenant's finish, computed from the arbiter's packet windows."""
+    arb = FleetArbiter(fleet_devices(), name=f"fair-{scheduler}")
+    finish: Dict[str, float] = {}
+    errors: List[str] = []
+
+    def tenant_main(tname: str, weight: float) -> None:
+        try:
+            with EngineSession(arbiter=arb,
+                               tenant=TenantConfig(tname, weight=weight),
+                               scheduler=scheduler,
+                               name=f"{scheduler}-{tname}") as s:
+                handles = []
+                for k in range(runs):
+                    prog, _ = make_program(f"{tname}-{k}", total,
+                                           seed=1000 * ord(tname[0]) + k)
+                    handles.append(s.submit(prog))
+                for h in handles:
+                    h.result()
+                finish[tname] = time.perf_counter()
+        except Exception as exc:          # surfaced after join
+            errors.append(f"{tname}: {exc!r}")
+
+    threads = [threading.Thread(target=tenant_main, args=(n, w),
+                                name=f"tenant-{n}")
+               for n, w in WEIGHTS.items()]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    windows = arb.windows()
+    stats = arb.tenant_stats(include_departed=True)
+    arb.close()
+    if errors:
+        raise RuntimeError("; ".join(errors))
+
+    # Snapshot when the weight-2 tenant reaches 90% of its backlog: it is
+    # still saturated there (its terminal drain-tail — where co-tenants
+    # rightfully absorb the capacity it can no longer use — would bias
+    # the share downward through no fault of the arbiter's).
+    acc, snap_t = 0.0, finish["a"]
+    target = 0.9 * runs * total
+    for w in sorted((w for w in windows if w.tenant == "a"),
+                    key=lambda w: w.t1):
+        acc += w.wg
+        if acc >= target:
+            snap_t = w.t1
+            break
+    wg = {n: 0.0 for n in WEIGHTS}
+    for w in windows:
+        if w.t1 <= snap_t:
+            wg[w.tenant] += w.wg
+        elif w.t0 < snap_t:               # straddles the snapshot: pro-rate
+            wg[w.tenant] += w.wg * (snap_t - w.t0) / (w.t1 - w.t0)
+    total_wg = sum(wg.values())
+    total_weight = sum(WEIGHTS.values())
+    shares, index = {}, 1.0
+    for name, weight in WEIGHTS.items():
+        share = wg[name] / total_wg if total_wg else 0.0
+        quota = weight / total_weight
+        shares[name] = {"share": share, "quota": quota,
+                        "err": abs(share / quota - 1.0)}
+        index = min(index, max(0.0, 1.0 - abs(share / quota - 1.0)))
+    return {
+        "scheduler": scheduler,
+        "index": index,
+        "shares": shares,
+        "snapshot_wg": wg,
+        "runs": sum(s["runs"] for s in stats.values()),
+        "denials": sum(s["denials"] for s in stats.values()),
+    }
+
+
+def run_exclusive(scheduler: str, runs: int, total: int) -> Dict:
+    """Two streaming tenants; an exclusive tenant arrives mid-stream.
+    Its packet windows must overlap zero co-tenant windows."""
+    arb = FleetArbiter(fleet_devices(), name="excl")
+    started = threading.Barrier(3)
+    t_req = [0.0]
+    errors: List[str] = []
+
+    def streamer(tname: str) -> None:
+        try:
+            with EngineSession(arbiter=arb, tenant=TenantConfig(tname),
+                               scheduler=scheduler, name=tname) as s:
+                handles = []
+                for k in range(runs):
+                    prog, _ = make_program(f"{tname}-{k}", total, seed=k)
+                    handles.append(s.submit(prog))
+                started.wait()
+                for h in handles:
+                    h.result()
+        except Exception as exc:
+            errors.append(f"{tname}: {exc!r}")
+
+    def exclusive() -> None:
+        try:
+            started.wait()
+            time.sleep(0.05)              # arrive mid-stream
+            t_req[0] = time.perf_counter()
+            with EngineSession(arbiter=arb,
+                               tenant=TenantConfig("ex", exclusive=True),
+                               scheduler=scheduler, name="ex") as s:
+                prog, _ = make_program("ex-0", total, seed=99)
+                s.submit(prog).result()
+        except Exception as exc:
+            errors.append(f"ex: {exc!r}")
+
+    threads = [threading.Thread(target=streamer, args=(n,))
+               for n in ("s1", "s2")] + [threading.Thread(target=exclusive)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    windows = arb.windows()
+    arb.close()
+    if errors:
+        raise RuntimeError("; ".join(errors))
+    overlaps = exclusive_overlaps(windows, "ex")
+    ex_starts = [w.t0 for w in windows if w.tenant == "ex"]
+    takeover = (min(ex_starts) - t_req[0]) if ex_starts else float("nan")
+    return {"scheduler": scheduler, "overlaps": overlaps,
+            "takeover_s": takeover,
+            "ex_packets": len(ex_starts),
+            "ok": overlaps == 0 and bool(ex_starts)}
+
+
+def run_solo_parity(scheduler: str, total: int) -> Dict:
+    """Plain session vs single-tenant arbiter session: bit-identical."""
+    prog, base = make_program("solo", total, seed=7, delay_s=0.0)
+    expected = base * np.float32(2.0)
+    with EngineSession(fleet_devices(), scheduler=scheduler,
+                       name="plain") as s:
+        plain = np.asarray(s.submit(prog).result().output)
+    arb = FleetArbiter(fleet_devices(), name="solo")
+    with EngineSession(arbiter=arb, scheduler=scheduler, name="tenant") as s:
+        tenant = np.asarray(s.submit(prog).result().output)
+    arb.close()
+    return {"scheduler": scheduler,
+            "plain_exact": bool(np.array_equal(plain, expected)),
+            "identical": bool(np.array_equal(plain, tenant)),
+            "ok": bool(np.array_equal(plain, expected)
+                       and np.array_equal(plain, tenant))}
+
+
+def run_sim_crosscheck(schedulers: List[str]) -> Dict:
+    """The discrete-event twin replays both experiments: work must be
+    conserved per tenant and exclusive windows must not overlap."""
+    from repro.tenancy import PacketWindow
+    devs = [SimDevice("gpu", throughput=2000.0),
+            SimDevice("cpu", throughput=1000.0)]
+    rows, ok = [], True
+    for s in schedulers:
+        r = simulate_multitenant(
+            [SimTenant("a", 4096, weight=2.0),
+             SimTenant("b", 4096, weight=1.0),
+             SimTenant("c", 4096, weight=1.0)],
+            devs, SimConfig(scheduler=s, seed=7))
+        conserved = all(v == 4096 for v in r.tenant_wg.values())
+        ok &= conserved
+        rows.append({"scheduler": s, "conserved": conserved,
+                     "makespan": r.makespan,
+                     "preemptions": r.preemptions})
+    r = simulate_multitenant(
+        [SimTenant("s1", 8192), SimTenant("s2", 8192),
+         SimTenant("ex", 1024, exclusive=True, arrival=1.0)],
+        devs, SimConfig(scheduler="dynamic", seed=3))
+    wins = [PacketWindow(*w) for w in r.windows]
+    sim_overlaps = exclusive_overlaps(wins, "ex")
+    ok &= sim_overlaps == 0
+    return {"ok": ok, "rows": rows, "exclusive_overlaps": sim_overlaps,
+            "takeover_s": r.takeover_latency.get("ex")}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=32,
+                    help="submit backlog depth per tenant")
+    ap.add_argument("--total", type=int, default=96,
+                    help="work-groups per run")
+    ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI-sized sweep")
+    args = ap.parse_args(argv)
+    if args.smoke and args.runs == ap.get_default("runs"):
+        args.runs = 20
+
+    t0 = time.time()
+    schedulers = available_schedulers()
+    print(f"fleet: gpu(1x) + cpu(2x throttle); tenants a:b:c = 2:1:1, "
+          f"{args.runs} runs x {args.total} wg each, "
+          f"median of {REPEATS} trials")
+    fairness = []
+    for s in schedulers:
+        trials = [run_fairness(s, args.runs, args.total)
+                  for _ in range(REPEATS)]
+        idxs = sorted(t["index"] for t in trials)
+        row = dict(trials[0], index=idxs[len(idxs) // 2],
+                   trial_indices=idxs)
+        fairness.append(row)
+        errs = ", ".join(f"{n}={v['share']:.3f}/{v['quota']:.3f}"
+                         for n, v in row["shares"].items())
+        print(f"{s:18s} index={row['index']:.3f} "
+              f"(trials {', '.join(f'{i:.3f}' for i in idxs)})  "
+              f"denials={row['denials']}")
+    min_index = min(r["index"] for r in fairness)
+    fair_ok = min_index >= 1.0 - SHARE_TOL
+
+    excl = run_exclusive("hguided_opt", args.runs, args.total)
+    print(f"exclusive: overlaps={excl['overlaps']} "
+          f"takeover={excl['takeover_s'] * 1e3:.1f}ms "
+          f"({excl['ex_packets']} packets) "
+          f"{'ok' if excl['ok'] else 'FAIL'}")
+
+    solo = run_solo_parity("hguided_opt", 256)
+    print(f"solo parity: exact={solo['plain_exact']} "
+          f"identical={solo['identical']} "
+          f"{'ok' if solo['ok'] else 'FAIL'}")
+
+    sim = run_sim_crosscheck(schedulers)
+    print(f"simulate_multitenant: conserved x{len(sim['rows'])} "
+          f"sched, exclusive overlaps={sim['exclusive_overlaps']} "
+          f"{'ok' if sim['ok'] else 'FAIL'}")
+
+    ok = fair_ok and excl["ok"] and solo["ok"] and sim["ok"]
+    print(f"min fair-share index over schedulers: {min_index:.3f} "
+          f"(tol {SHARE_TOL:.0%}) {'ok' if ok else 'FAIL'}")
+    out = {
+        "ok": ok,
+        "min_index": min_index,
+        "share_tol": SHARE_TOL,
+        "fairness": fairness,
+        "exclusive": excl,
+        "solo": solo,
+        "sim": sim,
+    }
+    os.makedirs("artifacts/bench", exist_ok=True)
+    with open("artifacts/bench/tenant_fairness.json", "w") as f:
+        json.dump(out, f, indent=1)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+    try:
+        from benchmarks import common
+    except ModuleNotFoundError:        # run as a plain script
+        import common
+    print(common.csv_line("tenant_fairness", (time.time() - t0) * 1e6,
+                          f"ok={ok}"))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,8 +2,9 @@
 
 CI's ``bench-trend`` job runs ``session_reuse.py``, ``offload_modes.py
 --smoke``, ``transfer_overlap.py --smoke``, ``sched_overhead.py
---smoke``, ``dag_pipeline.py --smoke``, ``fleet_slo.py --smoke`` and
-``energy_pareto.py --smoke`` with ``--json``, then calls this script to
+--smoke``, ``dag_pipeline.py --smoke``, ``fleet_slo.py --smoke``,
+``energy_pareto.py --smoke`` and ``tenant_fairness.py --smoke`` with
+``--json``, then calls this script to
 (a) merge the result files into one ``BENCH_PR.json`` artifact and
 (b) fail the job if any **headline ratio** regresses more than
 ``--tolerance`` (default 10 %) below the committed
@@ -32,6 +33,9 @@ entry.  All headline ratios are higher-is-better:
 * ``energy_pareto_min_dominance``    — worst-case relative joule saving
   of the ``hguided_energy`` budget frontier over the best time-only
   scheduler, across the deadline-slack grid (fraction in [0, 1]).
+* ``tenant_fairness_min_index``      — worst per-scheduler fair-share
+  index of three 2:1:1-weighted tenants on a shared fleet (1.0 = exact
+  proportional shares at the saturation snapshot; fraction in [0, 1]).
 
 Baseline values are committed *derated* from locally measured numbers so
 the gate trips on real regressions, not container noise.
@@ -40,7 +44,7 @@ Usage:
   python benchmarks/trend.py --session-reuse sr.json --offload-modes om.json
       --transfer-overlap to.json --sched-overhead so.json
       --dag-pipeline dag.json --fleet-slo fleet.json
-      --energy-pareto energy.json
+      --energy-pareto energy.json --tenant-fairness tenant.json
       [--baseline benchmarks/baseline.json]
       [--out BENCH_PR.json] [--tolerance 0.10]
 """
@@ -69,6 +73,8 @@ GATES = [
      lambda d: d["min_attainment"]),
     ("--energy-pareto", "energy_pareto", "energy_pareto_min_dominance",
      lambda d: d["min_dominance"]),
+    ("--tenant-fairness", "tenant_fairness", "tenant_fairness_min_index",
+     lambda d: d["min_index"]),
 ]
 
 

@@ -39,20 +39,24 @@ from repro.api.policies import (BufferPolicy, DevicePolicy, OffloadMode,
 from repro.api.session import EngineSession
 from repro.api.tier1 import coexec
 from repro.ckpt.checkpoint import ResumeReport, RunJournal, resume_run
-from repro.core.membuf import ArenaStats, BufferArena, TransferPipeline
+from repro.core.membuf import (ArenaPartition, ArenaStats, BufferArena,
+                               TransferPipeline)
 from repro.core.metrics import PhaseBreakdown
 from repro.core.region import Dim, Region
 from repro.core.runtime import Program
 from repro.core.scheduler import (GraphProgress, available_schedulers,
                                   register_scheduler, scheduler_accepts,
                                   unregister_scheduler)
+from repro.tenancy import (FleetArbiter, PacketWindow, TenantConfig,
+                           exclusive_overlaps, fair_share_index)
 
 __all__ = [
-    "ArenaStats", "BufferArena", "BufferPolicy", "CancelledError",
-    "DependencyError", "DevicePolicy", "Dim", "EngineSession",
-    "GraphProgress", "OffloadMode", "PhaseBreakdown", "Program", "Region",
-    "ResumeReport", "RunHandle", "RunJournal", "StaticDevicePolicy",
+    "ArenaPartition", "ArenaStats", "BufferArena", "BufferPolicy",
+    "CancelledError", "DependencyError", "DevicePolicy", "Dim",
+    "EngineSession", "FleetArbiter", "GraphProgress", "OffloadMode",
+    "PacketWindow", "PhaseBreakdown", "Program", "Region", "ResumeReport",
+    "RunHandle", "RunJournal", "StaticDevicePolicy", "TenantConfig",
     "TransferPipeline", "available_schedulers", "coexec",
-    "register_scheduler", "resume_run", "scheduler_accepts",
-    "unregister_scheduler",
+    "exclusive_overlaps", "fair_share_index", "register_scheduler",
+    "resume_run", "scheduler_accepts", "unregister_scheduler",
 ]

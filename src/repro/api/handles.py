@@ -152,6 +152,8 @@ class RunHandle:
 
     def _set_result(self, result) -> None:
         with self._lock:
+            if self._state in (_DONE, _CANCELLED):
+                return  # terminal states are final (cancel/settle race)
             self._result = result
             self._state = _DONE
         self._event.set()
@@ -159,6 +161,8 @@ class RunHandle:
 
     def _set_exception(self, exc: BaseException) -> None:
         with self._lock:
+            if self._state in (_DONE, _CANCELLED):
+                return  # terminal states are final (cancel/settle race)
             self._exception = exc
             self._state = _DONE
         self._event.set()

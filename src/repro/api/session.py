@@ -55,6 +55,7 @@ from repro.core.metrics import RunResult
 from repro.core.region import Region
 from repro.core.runtime import Program, WorkerPool, _RunContext
 from repro.core.scheduler import GraphProgress, scheduler_spec
+from repro.tenancy.arbiter import FleetArbiter, TenantConfig
 from repro.api.handles import DependencyError, RunHandle
 from repro.api.policies import BufferPolicy, DevicePolicy, OffloadMode
 
@@ -95,6 +96,8 @@ class EngineSession:
                  arena_ring: int = 2,
                  dispatch: str = "leased",
                  max_inflight: int = 1,
+                 arbiter: Optional[FleetArbiter] = None,
+                 tenant: Optional[TenantConfig] = None,
                  name: str = "session"):
         scheduler_spec(scheduler)            # fail fast on unknown names
         if dispatch not in ("leased", "per_packet"):
@@ -103,6 +106,9 @@ class EngineSession:
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, "
                              f"got {max_inflight}")
+        if tenant is not None and arbiter is None:
+            raise ValueError("tenant= requires arbiter= (a TenantConfig "
+                             "only means something on a shared fleet)")
         # how many READY submits may co-execute at once.  1 (default)
         # preserves strict FIFO: one run owns the fleet at a time.  >1 is
         # the DAG-pipelining mode: a dependent whose predecessors are done
@@ -110,8 +116,11 @@ class EngineSession:
         self.max_inflight = max_inflight
         self.dispatch = dispatch
         self.device_policy = device_policy or DevicePolicy()
-        self._devices: List[DeviceGroup] = \
-            self.device_policy.resolve(devices)
+        if devices is None and arbiter is not None:
+            # tenant sessions default to the arbiter's fleet
+            self._devices: List[DeviceGroup] = list(arbiter.devices)
+        else:
+            self._devices = self.device_policy.resolve(devices)
         self.scheduler = scheduler
         self.scheduler_kwargs = dict(scheduler_kwargs or {})
         self.buffer_policy = buffer_policy
@@ -122,31 +131,53 @@ class EngineSession:
         self.init_cost_s = init_cost_s
         self.reset_device_stats = reset_device_stats
         self.name = name
-        # the memory subsystem: session-owned buffer arena backing POOLED
-        # runs (register_workload/evict manage its entries; close drains it)
-        self.arena = BufferArena(capacity_bytes=arena_capacity_bytes,
-                                 ring=arena_ring, name=f"{name}-arena")
+        self._graph = GraphProgress()
+        # multi-tenant mode: the session registers with the arbiter and
+        # shares ITS pool + arena (an ArenaPartition namespaces this
+        # tenant's keys); every device pull is arbiter-gated.  Solo mode
+        # (arbiter=None) keeps the session-owned fast path unchanged.
+        self.arbiter = arbiter
+        self._tenant = None
+        if arbiter is not None:
+            tcfg = tenant if tenant is not None else TenantConfig(name=name)
+            self._tenant = arbiter.register(
+                tcfg, demand=lambda: self._graph.remaining() > 0)
+            self.arena = self._tenant.arena
+            self._pool = arbiter.pool
+            self._owns_pool = False
+        else:
+            # the memory subsystem: session-owned buffer arena backing
+            # POOLED runs (register_workload/evict manage its entries;
+            # close drains it)
+            self.arena = BufferArena(capacity_bytes=arena_capacity_bytes,
+                                     ring=arena_ring, name=f"{name}-arena")
+            self._pool = WorkerPool(name=name)
+            self._owns_pool = True
 
         self._executables: Dict[Tuple[str, str], Callable] = {}
         self._buffer_registry: Dict[Tuple[str, str], int] = {}
         self._workloads: Dict[str, Program] = {}   # ROI-registered programs
         self.init_payments = 0               # executable builds performed
         self._lock = threading.Lock()
-
-        self._pool = WorkerPool(name=name)
         # the pending set IS the dependency graph: submissions hold their
         # predecessor handles, and the ready-set dispatcher scans in submit
         # order (FIFO among simultaneously-ready nodes)
         self._pending: List[_Submission] = []
         self._inflight = 0                   # started, not yet terminal
-        self._graph = GraphProgress()
         self._issued: "weakref.WeakSet[RunHandle]" = weakref.WeakSet()
         self._cv = threading.Condition()
         self._closing = False
+        self._submitting = 0                 # submit/register calls in body
         self._seq = 0
         self._dispatcher = threading.Thread(
             target=self._dispatch_loop, name=f"{name}-dispatch", daemon=True)
         self._dispatcher.start()
+
+    @property
+    def tenant(self):
+        """The session's TenantHandle on a shared fleet (None when the
+        session owns its devices — the solo fast path)."""
+        return self._tenant
 
     # -- elastic membership --------------------------------------------------
     @property
@@ -217,9 +248,14 @@ class EngineSession:
         lazily by the first submit).  Returns the registered program.
         """
         program.validate()
-        with self._cv:
-            if self._closing:
-                raise RuntimeError(f"session {self.name!r} is closed")
+        self._begin_op()
+        try:
+            return self._register_workload_op(program, build=build)
+        finally:
+            self._end_op()
+
+    def _register_workload_op(self, program: Program, *,
+                              build: bool) -> Program:
         with self._lock:
             devices = list(self._devices)
         if build:
@@ -282,6 +318,23 @@ class EngineSession:
                 self._buffer_registry[key] = \
                     self._buffer_registry.get(key, 0) + 1
         return fn
+
+    # -- close/submit serialization ------------------------------------------
+    def _begin_op(self) -> None:
+        """Open a submit/register critical window.  ``close()`` waits for
+        every open window before tearing anything down, so an in-flight
+        ``submit()`` either completes (and its submission is drained by
+        the closing dispatcher) or never passed this gate — the queue
+        discard hook can no longer race a concurrent close."""
+        with self._cv:
+            if self._closing:
+                raise RuntimeError(f"session {self.name!r} is closed")
+            self._submitting += 1
+
+    def _end_op(self) -> None:
+        with self._cv:
+            self._submitting -= 1
+            self._cv.notify_all()
 
     # -- submission ----------------------------------------------------------
     def submit(self, program: Program, *,
@@ -348,6 +401,24 @@ class EngineSession:
         be resumed via ``repro.ckpt.resume_run`` executing only
         never-committed packets.
         """
+        self._begin_op()
+        try:
+            return self._submit_locked_out(
+                program, powers=powers, scheduler=scheduler,
+                scheduler_kwargs=scheduler_kwargs, collect=collect,
+                cache=cache, region=region, mode=mode,
+                buffer_policy=buffer_policy, dispatch=dispatch,
+                deps=deps, feed=feed, journal=journal,
+                journal_key=journal_key)
+        finally:
+            self._end_op()
+
+    def _submit_locked_out(self, program: Program, *,
+                           powers, scheduler, scheduler_kwargs, collect,
+                           cache, region, mode, buffer_policy, dispatch,
+                           deps, feed, journal, journal_key) -> RunHandle:
+        """``submit`` body, running inside a ``_begin_op`` window (the
+        close/submit serialization gate)."""
         program.validate()
         if scheduler is not None:
             scheduler_spec(scheduler)        # fail fast, not in dispatcher
@@ -433,8 +504,9 @@ class EngineSession:
         work = (region if region is not None
                 else program.work_region).dims[0].size
         with self._cv:
-            if self._closing:
-                raise RuntimeError(f"session {self.name!r} is closed")
+            # no _closing re-check: this thread holds a _begin_op window,
+            # so a concurrent close() waits for it — the submission lands
+            # in the queue and is drained by the closing dispatcher
             sub.handle = RunHandle(program.name, self._seq,
                                    discard=lambda: self._discard(sub),
                                    deps=dep_list)
@@ -494,8 +566,11 @@ class EngineSession:
                 action = self._next_action_locked()
                 while action is None:
                     if (self._closing and not self._pending
-                            and self._inflight == 0):
-                        return                # closing and graph drained
+                            and self._inflight == 0
+                            and self._submitting == 0):
+                        # closing, graph drained, and no submit/register
+                        # still inside its _begin_op window
+                        return
                     self._cv.wait()
                     action = self._next_action_locked()
                 kind, sub = action
@@ -576,8 +651,19 @@ class EngineSession:
             journal=sub.journal,
             journal_key=sub.journal_key,
             progress=self._graph,
-            progress_key=sub.handle)
-        result = ctx.execute()
+            progress_key=sub.handle,
+            tenant=self._tenant)
+        if self._tenant is not None:
+            # run brackets: exclusive tenants fence the fleet here, and
+            # the arbiter catches the tenant's virtual time up on
+            # idle->active so sleepers don't hoard credit
+            self._tenant.begin_run()
+            try:
+                result = ctx.execute()
+            finally:
+                self._tenant.end_run()
+        else:
+            result = ctx.execute()
         if sub.mode is OffloadMode.BINARY:
             # the binary contract tears down per submit: evict anything
             # cached under this name (stale earlier registrations included)
@@ -607,9 +693,16 @@ class EngineSession:
                 return
             self._closing = True
             self._cv.notify_all()
-        self._dispatcher.join()              # drains the whole graph
-        self.arena.close()                   # pooled buffers released
-        self._pool.close()
+        self._dispatcher.join()              # drains graph + open submits
+        if self._tenant is not None:
+            # tenant mode: retire from the arbiter (drops this tenant's
+            # arena partition keys); the SHARED arena/pool stay open for
+            # co-tenants and are closed by FleetArbiter.close()
+            self.arbiter.unregister(self._tenant)
+        else:
+            self.arena.close()               # pooled buffers released
+        if self._owns_pool:
+            self._pool.close()
 
     def __enter__(self) -> "EngineSession":
         return self

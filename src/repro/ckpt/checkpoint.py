@@ -123,8 +123,9 @@ def restore(template, directory: str, step: Optional[int] = None,
         want = manifest["leaves"][key]
         assert list(arr.shape) == want["shape"], key
         leaves.append(arr)
-    state = jax.tree_util.tree_unflatten(treedef.treedef if hasattr(treedef, "treedef")
-                                         else treedef, leaves)
+    state = jax.tree_util.tree_unflatten(
+        treedef.treedef if hasattr(treedef, "treedef") else treedef,
+        leaves)
     return state, step
 
 

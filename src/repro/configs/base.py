@@ -25,7 +25,7 @@ class MoEConfig:
     n_routed: int = 0              # routed experts (0 = no MoE anywhere)
     n_shared: int = 0              # always-on shared experts (DeepSeek style)
     top_k: int = 1
-    d_ff: int = 0                  # per-expert hidden dim (0 -> use model d_ff)
+    d_ff: int = 0                  # per-expert hidden dim (0 -> model d_ff)
     every: int = 1                 # MoE layer every `every` layers (jamba: 2)
     first_dense: int = 0           # leading dense layers (deepseek: 1)
     capacity_factor: float = 1.25  # token-dropping capacity factor
@@ -74,12 +74,12 @@ class ModelConfig:
     mla: MLAConfig = field(default_factory=MLAConfig)
     # hybrid (jamba): attention mixer every `attn_every` layers (at offset
     # `attn_offset` within each period); all other mixers are Mamba blocks.
-    attn_every: int = 0            # 0 -> attention everywhere (or nowhere if ssm)
+    attn_every: int = 0            # 0 -> attention everywhere (none if ssm)
     attn_offset: int = 0
     # modality frontend ("" | "vit_stub" | "encodec_stub")
     frontend: str = ""
-    n_codebooks: int = 1           # audio: EnCodec codebooks, embeddings summed
-    n_patches: int = 256           # vlm: stub image patch embeddings per sample
+    n_codebooks: int = 1           # audio: EnCodec codebooks, emb summed
+    n_patches: int = 256           # vlm: stub image patch embs per sample
     # numerics / memory policy
     dtype: str = "bfloat16"        # activation/param dtype for full configs
     # dtype of the materialized attention score/prob buffers in the blocked
@@ -97,7 +97,7 @@ class ModelConfig:
     # forward pass per block during its segment's backward, minimal memory)
     # or not ("none": 2 passes, transient segment internals in memory)
     remat_inner: str = "full"
-    attn_chunk: int = 2048         # kv-block size for chunked (flash-style) attention
+    attn_chunk: int = 2048         # kv-block size for chunked attention
     scan_chunk: int = 128          # mamba chunked-scan inner length
     use_pallas: bool = False       # TPU target: Pallas kernels for attn / scan
     # decode runs the block stack UNROLLED with per-block (unstacked) caches:
@@ -136,13 +136,15 @@ class ModelConfig:
             return "mamba"
         if self.attn_every <= 1:
             return "attn"
-        return "attn" if layer_idx % self.attn_every == self.attn_offset else "mamba"
+        return ("attn" if layer_idx % self.attn_every == self.attn_offset
+                else "mamba")
 
     def mlp_kind(self, layer_idx: int) -> str:
         """'dense' | 'moe' for layer `layer_idx`."""
         if self.moe.n_routed == 0 or layer_idx < self.moe.first_dense:
             return "dense"
-        return "moe" if (layer_idx - self.moe.first_dense) % self.moe.every == 0 else "dense"
+        phase = (layer_idx - self.moe.first_dense) % self.moe.every
+        return "moe" if phase == 0 else "dense"
 
     @property
     def is_recurrent(self) -> bool:
@@ -164,7 +166,8 @@ class ModelConfig:
     def validate(self) -> None:
         body = self.n_layers - self.moe.first_dense
         assert body % self.block_period == 0, (
-            f"{self.name}: {body} body layers not divisible by period {self.block_period}")
+            f"{self.name}: {body} body layers not divisible by period "
+            f"{self.block_period}")
         if self.attn_kind == "gqa":
             assert self.n_heads % self.n_kv_heads == 0
 
@@ -213,7 +216,8 @@ def reduce_config(cfg: ModelConfig, **overrides) -> ModelConfig:
         n_layers=max(period, 2) + cfg.moe.first_dense,
         d_model=64,
         n_heads=4,
-        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        n_kv_heads=(min(cfg.n_kv_heads, 2)
+                    if cfg.n_kv_heads < cfg.n_heads else 4),
         head_dim=16,
         d_ff=128,
         vocab_size=256,
@@ -225,7 +229,8 @@ def reduce_config(cfg: ModelConfig, **overrides) -> ModelConfig:
     if cfg.moe.n_routed:
         # capacity_factor = E makes C >= T*k: no token dropping at smoke scale,
         # so cached decode exactly matches the full forward in tests.
-        small["moe"] = replace(cfg.moe, n_routed=4, n_shared=min(cfg.moe.n_shared, 1),
+        small["moe"] = replace(cfg.moe, n_routed=4,
+                               n_shared=min(cfg.moe.n_shared, 1),
                                top_k=2, d_ff=64, capacity_factor=4.0)
     if cfg.family in ("ssm", "hybrid"):
         small["ssm"] = replace(cfg.ssm, d_state=8)

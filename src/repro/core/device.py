@@ -52,7 +52,8 @@ class DeviceGroup:
 
     def run_packet(self, fn: Callable, offset: int, size: int):
         """Execute fn(offset, size); returns (result, wg_per_s)."""
-        if self.fail_after is not None and self.packets_done >= self.fail_after:
+        if (self.fail_after is not None
+                and self.packets_done >= self.fail_after):
             self.dead = True
             raise DeviceFailure(f"{self.name} failed (injected)")
         t0 = time.perf_counter()

@@ -46,6 +46,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 __all__ = [
+    "ArenaPartition",
     "ArenaStats",
     "BufferArena",
     "BufferLease",
@@ -319,6 +320,62 @@ class BufferArena:
             self._stats.evictions += n
             return n
 
+    def evict_prefix(self, prefix: str) -> int:
+        """Drop every entry whose program key starts with ``prefix`` (a
+        tenant partition closing: all its programs, all devices/shapes).
+        Same holder semantics as :meth:`evict`."""
+        with self._lock:
+            victims = [k for k in self._by_key if k[0].startswith(prefix)]
+            n = 0
+            for k in victims:
+                n += len(self._by_key.pop(k))
+            self._stats.evictions += n
+            return n
+
+    def trim_prefix(self, prefix: str, cap_bytes: int) -> int:
+        """Evict LRU *free* entries under ``prefix`` until that prefix's
+        free bytes fit ``cap_bytes`` (the per-tenant LRU cap of an
+        :class:`ArenaPartition`).  Leased entries are never touched — a
+        tenant over its cap keeps its in-flight buffers and simply loses
+        reuse.  Returns the number of entries evicted."""
+        dropped = 0
+        with self._lock:
+            while True:
+                free = [
+                    e
+                    for k, ents in self._by_key.items()
+                    if k[0].startswith(prefix)
+                    for e in ents
+                    if not e.leased
+                ]
+                if sum(e.cap for e in free) <= cap_bytes:
+                    return dropped
+                lru = min(free, key=lambda e: e.stamp)
+                self._by_key[lru.key].remove(lru)
+                if not self._by_key[lru.key]:
+                    del self._by_key[lru.key]
+                self._stats.evictions += 1
+                dropped += 1
+
+    def stats_for_prefix(self, prefix: str) -> ArenaStats:
+        """Gauges (entries / leases / bytes) restricted to keys under
+        ``prefix``.  The monotonic counters stay arena-global (acquire
+        resolution crosses partitions via bucket steals), so they are
+        reported as zero here — read :attr:`stats` for them."""
+        with self._lock:
+            s = ArenaStats()
+            for k, ents in self._by_key.items():
+                if not k[0].startswith(prefix):
+                    continue
+                for e in ents:
+                    s.entries += 1
+                    if e.leased:
+                        s.leases_out += 1
+                        s.bytes_leased += e.cap
+                    else:
+                        s.bytes_pooled += e.cap
+            return s
+
     def close(self) -> int:
         """Release everything and refuse further acquires.  Returns the
         number of entries dropped (leased holders keep their arrays)."""
@@ -350,6 +407,79 @@ class BufferArena:
         return (f"BufferArena({self.name!r}, entries={s.entries}, "
                 f"pooled={s.bytes_pooled}B, leased={s.bytes_leased}B, "
                 f"hit%={100 * s.hits / max(1, s.acquires):.0f})")
+
+
+# --------------------------------------------------------------------------
+# Arena partitions (multi-tenant)
+# --------------------------------------------------------------------------
+
+
+class ArenaPartition:
+    """A tenant's slice of a shared :class:`BufferArena`.
+
+    Every program key is namespaced as ``"<tenant>::<program>"``, so two
+    tenants registering the same workload name never alias ring entries.
+    ``cap_bytes`` (optional) bounds the partition's *free* bytes with its
+    own LRU trim on top of the arena-global capacity -- a noisy tenant
+    cannot squat the whole pool with cold buffers.  Closing the partition
+    evicts only the tenant's keys; the shared arena stays open for
+    co-tenants.  Exposes the same acquire/release/register/evict surface
+    the runtime expects from a session arena.
+    """
+
+    def __init__(self, arena: BufferArena, tenant: str,
+                 cap_bytes: Optional[int] = None):
+        self.arena = arena
+        self.tenant = str(tenant)
+        self.cap_bytes = None if cap_bytes is None else int(cap_bytes)
+        self._prefix = self.tenant + "::"
+        self._closed = False
+
+    def scoped(self, program: str) -> str:
+        return self._prefix + program
+
+    def _trim(self) -> None:
+        if self.cap_bytes is not None:
+            self.arena.trim_prefix(self._prefix, self.cap_bytes)
+
+    # -- BufferArena surface ------------------------------------------------
+    def acquire(self, program: str, device: str, shape, dtype) -> BufferLease:
+        if self._closed:
+            raise RuntimeError(
+                f"arena partition {self.tenant!r} is closed")
+        lease = self.arena.acquire(self.scoped(program), device, shape, dtype)
+        self._trim()
+        return lease
+
+    def release(self, lease: BufferLease) -> None:
+        self.arena.release(lease)
+        self._trim()
+
+    def register(self, program: str, device: str, shape, dtype,
+                 count: Optional[int] = None) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"arena partition {self.tenant!r} is closed")
+        self.arena.register(self.scoped(program), device, shape, dtype,
+                            count=count)
+        self._trim()
+
+    def evict(self, program: str) -> int:
+        return self.arena.evict(self.scoped(program))
+
+    def close(self) -> int:
+        """Drop this tenant's entries only; the shared arena stays open."""
+        self._closed = True
+        return self.arena.evict_prefix(self._prefix)
+
+    @property
+    def stats(self) -> ArenaStats:
+        return self.arena.stats_for_prefix(self._prefix)
+
+    def __repr__(self) -> str:
+        s = self.stats
+        return (f"ArenaPartition({self.tenant!r}, entries={s.entries}, "
+                f"pooled={s.bytes_pooled}B, leased={s.bytes_leased}B)")
 
 
 # --------------------------------------------------------------------------

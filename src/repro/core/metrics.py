@@ -126,7 +126,8 @@ def speedup(fastest_single: float, coexec_time: float) -> float:
 
 def efficiency(fastest_single: float, coexec_time: float,
                single_times: Sequence[float]) -> float:
-    return speedup(fastest_single, coexec_time) / s_max_from_times(single_times)
+    return (speedup(fastest_single, coexec_time)
+            / s_max_from_times(single_times))
 
 
 def geomean(xs: Sequence[float]) -> float:

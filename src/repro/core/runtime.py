@@ -295,7 +295,8 @@ class _RunContext:
                  journal=None,
                  journal_key: Optional[str] = None,
                  progress=None,
-                 progress_key: Optional[object] = None):
+                 progress_key: Optional[object] = None,
+                 tenant=None):
         self.program = program
         self.devices = list(devices)
         if not self.devices:
@@ -334,6 +335,11 @@ class _RunContext:
         # this run's live scheduler so graph-wide remaining() is exact
         self.progress = progress
         self.progress_key = progress_key
+        # multi-tenant arbitration: a TenantHandle whose begin_packet /
+        # end_packet bracket every device pull (repro.tenancy).  None =
+        # the session owns the fleet (the pre-tenancy fast path, zero
+        # overhead: solo runs stay bit-identical).
+        self.tenant = tenant
 
     def _invoke(self, fn: Callable, region: Region) -> Callable:
         """Adapt a packet's absolute row panel to the range-fn contract
@@ -412,13 +418,40 @@ class _RunContext:
                 compiled_ev.wait()
                 clock.mark_once("roi")
 
+        # multi-tenant arbitration: tb[i] is the begin_packet timestamp
+        # that brackets device i's current packet window (written/read
+        # only by device i's thread)
+        tenant = self.tenant
+        tb: List[float] = [0.0] * n
+
         def pull(i: int) -> Any:
             """The dispatch hot path: leased (local-lease pop, amortized
-            lock) or per-packet (the classic hand-off baseline)."""
+            lock) or per-packet (the classic hand-off baseline).  Under a
+            tenant, every pull first asks the arbiter; a denial reclaims
+            the device's lease back to the retry pool (the packet-boundary
+            preemption) and reads as an empty pull — the loop's drained()
+            protocol keeps the thread polling while work remains."""
             sched = sched_of(i)
+            if tenant is not None:
+                if not tenant.begin_packet(i):
+                    sched.reclaim_lease(i)
+                    return None
+                tb[i] = time.perf_counter()
+                pkt = (sched.acquire(i) if self.dispatch == "leased"
+                       else sched.next_packet(i))
+                if pkt is None:
+                    tenant.end_packet(i, 0, tb[i])
+                return pkt
             if self.dispatch == "leased":
                 return sched.acquire(i)
             return sched.next_packet(i)
+
+        def tenant_end(i: int, wg: int) -> None:
+            """Close device i's tenant packet window (wg=0: the packet was
+            requeued, charge nothing).  Must be called exactly once per
+            successful begin_packet, on every exit path."""
+            if tenant is not None:
+                tenant.end_packet(i, wg, tb[i])
 
         def fetch_and_stage(i: int, fn: Callable):
             """Stage-in for device ``i``: pull the next packet and bind its
@@ -436,6 +469,7 @@ class _RunContext:
                 # invisible to the drained() protocol
                 sched_of(i).requeue(pkt)
                 sched_of(i).release(i)
+                tenant_end(i, 0)
                 raise
             if pipe is not None:
                 pipe.note_h2d(time.perf_counter() - t0)
@@ -485,6 +519,7 @@ class _RunContext:
             sched.requeue(pkt)
             sched.mark_dead(i)
             sched.release(i)
+            tenant_end(i, 0)
 
         def device_loop_sync(i: int, dev: DeviceGroup, fn: Callable,
                              sched: SchedulerBase):
@@ -523,9 +558,9 @@ class _RunContext:
                     else run_region.row_panel(pkt.offset, pkt.size)
                 if in_src is not None:
                     np.copyto(in_scratch, in_src)     # per-packet bulk copy
-                    bytes_io[i] += stage_bytes        # bulk re-stage, every pkt
+                    bytes_io[i] += stage_bytes        # bulk re-stage per pkt
                 elif not staged_in:
-                    bytes_io[i] += prog.in_bytes      # registered: once per dev
+                    bytes_io[i] += prog.in_bytes      # registered: once/dev
                     staged_in = True
                 try:
                     res, wg_s = dev.run_packet(self._invoke(fn, pkt_region),
@@ -534,6 +569,7 @@ class _RunContext:
                     sched.requeue(pkt)
                     sched.mark_dead(i)
                     sched.release(i)
+                    tenant_end(i, 0)
                     break
                 except Exception as e:
                     # unexpected executor error: same fault-tolerance path as
@@ -545,6 +581,7 @@ class _RunContext:
                     sched.requeue(pkt)
                     sched.mark_dead(i)
                     sched.release(i)
+                    tenant_end(i, 0)
                     break
                 try:
                     sched.note_packet_latency(i, pkt.size / max(wg_s, 1e-9))
@@ -555,6 +592,7 @@ class _RunContext:
                             self.collect(pkt, res, dev)
                         my_done.append(("pkt", pkt))
                         sched.release(i)
+                        tenant_end(i, pkt.size)
                         continue
                     r0 = pkt.offset * prog.out_rows_per_wg
                     r1 = (pkt.offset + pkt.size) * prog.out_rows_per_wg
@@ -568,6 +606,7 @@ class _RunContext:
                     journal_commit(pkt, res)
                     my_done.append(("pkt", pkt))
                     sched.release(i)
+                    tenant_end(i, pkt.size)
                 except Exception as e:
                     # commit-path failure (mis-shaped result, collect hook,
                     # observe): must release the in-flight packet and mark
@@ -578,6 +617,7 @@ class _RunContext:
                     sched.requeue(pkt)
                     sched.mark_dead(i)
                     sched.release(i)
+                    tenant_end(i, 0)
                     break
 
         def device_loop_pipelined(i: int, dev: DeviceGroup, fn: Callable,
@@ -643,6 +683,7 @@ class _RunContext:
                     bytes_io[i] += nbytes             # result readback
                     pipe.stage_out(make_commit(i, pkt, res), nbytes)
                     sched.release(i)
+                    tenant_end(i, pkt.size)
                 except Exception as e:
                     dev.dead = True
                     abort_pipelined(i, pkt, e)
@@ -761,6 +802,10 @@ class _RunContext:
         finally:
             if pipe is not None:
                 pipe.close()
+            if tenant is not None and state["sched"] is not None:
+                # per-tenant SchedStats rollup across all of the tenant's
+                # runs (carves, steals, reclaims, lock crossings)
+                tenant.merge_stats(state["sched"].stats)
         phases = PhaseBreakdown(
             init_s=clock.between("start", "compiled"),
             offload_s=clock.between("compiled", "assembled"),

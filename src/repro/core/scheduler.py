@@ -134,6 +134,18 @@ class SchedStats:
     local_pops: int = 0          # packets popped from a local lease
     steals: int = 0              # successful steal operations
     stolen_packets: int = 0      # packets moved by steals
+    reclaims: int = 0            # leases drained back by preemption
+    reclaimed_packets: int = 0   # packets returned by reclaim_lease
+
+    def merge(self, other: "SchedStats") -> "SchedStats":
+        """Accumulate ``other`` into this instance (per-tenant rollup:
+        one run's scheduler dies with its _RunContext, so a tenant's
+        cross-run dispatch accounting sums the per-run counters here).
+        Returns self for chaining."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
 
 
 class PacketLease:
@@ -344,6 +356,24 @@ class SchedulerBase:
         """Return an in-flight packet to the queue (device failure)."""
         with self._lock:
             self._requeue_locked(pkt)
+
+    def reclaim_lease(self, device: int) -> int:
+        """Return ``device``'s leased-but-unexecuted packets to the retry
+        pool WITHOUT marking the device dead (the multi-tenant preemption
+        hook: a device denied at the grant boundary must not strand its
+        planned packets — any still-granted device of the same run picks
+        them up from the retry queue).  The device stays eligible for
+        future leases; in-flight (acquired) packets are untouched, so the
+        exact-cover and ``drained()`` protocols hold across preemptions.
+        Returns the number of packets reclaimed."""
+        with self._lock:
+            pkts = self._leases[device].drain()
+            for pkt in pkts:
+                self._requeue_locked(pkt)
+            if pkts:
+                self.stats.reclaims += 1
+                self.stats.reclaimed_packets += len(pkts)
+            return len(pkts)
 
     def mark_dead(self, device: int) -> None:
         """Notify that a device died: its leased-but-unexecuted packets

@@ -553,12 +553,206 @@ def simulate_dag(nodes: Sequence[SimNode], devices: Sequence[SimDevice],
 
     if len(finished) != len(nodes):
         raise RuntimeError(
-            f"graph stalled: {sorted(set(n.name for n in nodes) - set(finished))} "
+            "graph stalled: "
+            f"{sorted(set(n.name for n in nodes) - set(finished))} "
             "never became ready (cycle or lost wakeup)")
     return DagSimResult(makespan=max(finished.values(), default=0.0),
                         node_finish=dict(finished),
                         node_start=dict(started),
                         device_busy=busy, depth=depth)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant simulation: the FleetArbiter's discrete-event twin.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimTenant:
+    """One tenant of a simulated shared fleet: a work range plus the
+    arbitration policy knobs of ``repro.tenancy.TenantConfig``.
+    ``arrival`` delays activation (an exclusive tenant arriving mid-stream
+    is the takeover-latency experiment)."""
+    name: str
+    total_work: int
+    lws: int = 1
+    weight: float = 1.0
+    priority: int = 0
+    exclusive: bool = False
+    arrival: float = 0.0
+    scheduler: Optional[str] = None        # per-tenant override of cfg's
+
+
+@dataclass
+class TenantSimResult:
+    makespan: float
+    tenant_finish: Dict[str, float]
+    tenant_wg: Dict[str, int]              # executed work per tenant
+    shares: Dict[str, float]               # tenant_wg normalized
+    windows: List[Tuple[str, int, float, float, int]]
+    #   (tenant, device, start, end, wg) — the isolation audit record
+    preemptions: int
+    takeover_latency: Dict[str, float]     # exclusive: first grant - arrival
+    device_busy: List[float]
+
+
+def simulate_multitenant(tenants: Sequence[SimTenant],
+                         devices: Sequence[SimDevice],
+                         cfg: SimConfig) -> TenantSimResult:
+    """Discrete-event execution of N tenants sharing one device fleet.
+
+    The threaded twin is ``FleetArbiter`` + N tenant ``EngineSession``s:
+    one scheduler instance per tenant (exactly one ``_RunContext`` each),
+    and every device event runs the arbiter's election — exclusive fence
+    head first, then the highest priority class with work, then lowest
+    weighted virtual time (``vt += wg / weight`` per packet).  Grants
+    flip only at packet boundaries (a device event IS one), and an
+    exclusive tenant's first packet gates on every co-tenant's in-flight
+    packet end — zero overlap by construction, recorded in ``windows``
+    so tests can verify rather than assume it.  Devices keep
+    ``simulate()``'s cost model (irregularity, jitter, ``fail_at``
+    requeue + mark_dead fault tolerance).
+    """
+    import random
+    rng = random.Random(cfg.seed)
+    policy = cfg.policy
+    leased = cfg.dispatch == "leased"
+    hand_off = cfg.hand_off_cost
+    n = len(devices)
+    names = [t.name for t in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError("duplicate tenant names")
+    profiles = [DeviceProfile(d.name, d.throughput * d.profile_bias,
+                              power_model=d.power_model)
+                for d in devices]
+    scheds: Dict[str, object] = {}
+    for ten in tenants:
+        s = make_scheduler(ten.scheduler or cfg.scheduler, ten.total_work,
+                           ten.lws, profiles, **cfg.scheduler_kwargs)
+        if leased:
+            s.lease_overhead_s = hand_off
+        scheds[ten.name] = s
+    vt = {t.name: 0.0 for t in tenants}
+    usage = {t.name: 0 for t in tenants}
+    windows: List[Tuple[str, int, float, float, int]] = []
+    takeover: Dict[str, float] = {}
+    preempt = 0
+    grant: List[Optional[str]] = [None] * n
+    cur_tenant: List[Optional[str]] = [None] * n   # packet in flight
+    cur_end = [0.0] * n
+    busy = [0.0] * n
+    dead = [False] * n
+    first = [True] * n
+    heap: List[Tuple[float, int]] = [(0.0, i) for i in range(n)]
+    heapq.heapify(heap)
+    idle: List[int] = []
+    host_free = 0.0
+    arrivals = sorted({t.arrival for t in tenants})
+
+    def has_work(name: str) -> bool:
+        return scheds[name].remaining() > 0
+
+    def elect_order(now: float) -> List[SimTenant]:
+        """Candidates in grant order — the arbiter's _elect_locked rule.
+        An active exclusive tenant starves everyone else (the fence)."""
+        ex = [t for t in tenants
+              if t.exclusive and t.arrival <= now and has_work(t.name)]
+        if ex:
+            return [min(ex, key=lambda t: (t.arrival, t.name))]
+        cands = [t for t in tenants if t.arrival <= now and has_work(t.name)]
+        return sorted(cands, key=lambda t: (-t.priority, vt[t.name], t.name))
+
+    def wake_idle(at: float) -> None:
+        nonlocal idle
+        for j in idle:
+            if not dead[j]:
+                heapq.heappush(heap, (at, j))
+        idle = []
+
+    while heap:
+        t0, i = heapq.heappop(heap)
+        if dead[i]:
+            continue
+        d = devices[i]
+        cur_tenant[i] = None               # this device's packet has ended
+        pkt = None
+        src: Optional[SimTenant] = None
+        crossings = 0
+        for cand in elect_order(t0):
+            sched = scheds[cand.name]
+            c0 = sched.stats.lock_crossings
+            p = sched.acquire(i) if leased else sched.next_packet(i)
+            crossings = sched.stats.lock_crossings - c0
+            if p is not None:
+                pkt, src = p, cand
+                break
+        if pkt is None:
+            nxt = [a for a in arrivals if a > t0]
+            if nxt:                        # sleep until the next activation
+                heapq.heappush(heap, (nxt[0], i))
+            else:
+                idle.append(i)             # re-woken on packet completion
+            continue
+        start = t0
+        if src.exclusive:
+            # the fence: no exclusive packet may start while a co-tenant
+            # packet is in flight anywhere (the arbiter's _begin_run wait)
+            start = max([start] + [cur_end[j] for j in range(n)
+                                   if cur_tenant[j] is not None
+                                   and cur_tenant[j] != src.name])
+        if crossings:
+            s2 = max(start, host_free)
+            host_free = s2 + crossings * hand_off
+            start = s2
+        if src.exclusive and src.name not in takeover:
+            takeover[src.name] = start - src.arrival
+        if grant[i] is not None and grant[i] != src.name \
+                and has_work(grant[i]):
+            preempt += 1                   # took the device from live work
+        grant[i] = src.name
+        cost = d.packet_cost(pkt.offset, pkt.size, src.total_work, start,
+                             policy, first[i])
+        first[i] = False
+        dt = cost.t + (start - t0)
+        if d.jitter > 0:
+            dt *= math.exp(rng.gauss(0.0, d.jitter))
+        end = t0 + dt
+        if d.fail_at is not None and end > d.fail_at >= t0:
+            dead[i] = True
+            sched.requeue(pkt)
+            sched.release(i)
+            sched.mark_dead(i)
+            wake_idle(d.fail_at)
+            for j in range(n):             # survivors absorb the requeue
+                if not dead[j] and j != i:
+                    heapq.heappush(heap, (max(d.fail_at, cur_end[j]), j))
+            continue
+        vt[src.name] += pkt.size / src.weight
+        usage[src.name] += pkt.size
+        busy[i] += dt
+        cur_tenant[i] = src.name
+        cur_end[i] = end
+        windows.append((src.name, i, start, end, pkt.size))
+        sched.note_packet_latency(i, dt)
+        if hasattr(sched, "observe"):
+            sched.observe(i, pkt.size / max(dt, 1e-12))
+        sched.release(i)
+        heapq.heappush(heap, (end, i))
+        wake_idle(end)                     # completions re-open elections
+
+    for ten in tenants:
+        if scheds[ten.name].remaining() > 0:
+            raise RuntimeError(
+                f"tenant {ten.name!r}: all devices failed with work left")
+    tenant_end = {t.name: 0.0 for t in tenants}
+    for name, _dev, _s, e, _wg in windows:
+        tenant_end[name] = max(tenant_end[name], e)
+    total = sum(usage.values())
+    shares = {k: (v / total if total else 0.0) for k, v in usage.items()}
+    return TenantSimResult(
+        makespan=max(tenant_end.values(), default=0.0),
+        tenant_finish=tenant_end, tenant_wg=dict(usage), shares=shares,
+        windows=windows, preemptions=preempt, takeover_latency=takeover,
+        device_busy=busy)
 
 
 # ---------------------------------------------------------------------------
@@ -605,7 +799,7 @@ class ServeSimState:
 
 @dataclass
 class ServeSimResult:
-    requests: List                         # the input requests, accounting filled
+    requests: List                         # input requests, accounting filled
     duration: float                        # last completion / shed time
     device_busy: List[float]
     rounds: int

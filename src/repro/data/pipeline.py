@@ -40,7 +40,8 @@ class SyntheticPipeline:
         self._succ = rng.integers(0, self.V, size=(self.V,), dtype=np.int64)
 
     # -- pure batch construction ------------------------------------------
-    def batch_at(self, step: int, rows: Optional[slice] = None) -> Dict[str, np.ndarray]:
+    def batch_at(self, step: int,
+                 rows: Optional[slice] = None) -> Dict[str, np.ndarray]:
         B, S = self.shape.global_batch, self.shape.seq_len
         r0, r1 = (rows.start or 0, rows.stop if rows and rows.stop else B) \
             if rows else (0, B)
@@ -57,15 +58,17 @@ class SyntheticPipeline:
         for t in range(1, S):
             prev = toks[:, t - 1]
             succ = self._succ[prev]
-            toks[:, t] = np.where(follow[:, t][..., None] if cb else follow[:, t],
-                                  succ, noise[:, t])
+            toks[:, t] = np.where(
+                follow[:, t][..., None] if cb else follow[:, t],
+                succ, noise[:, t])
         out = {"tokens": toks}
         if self.cfg.frontend == "vit_stub":
             out["patches"] = rng.standard_normal(
                 (n, self.cfg.n_patches, self.cfg.d_model)).astype(np.float32)
         return out
 
-    def slice_rows(self, step: int, start: int, size: int) -> Dict[str, np.ndarray]:
+    def slice_rows(self, step: int, start: int,
+                   size: int) -> Dict[str, np.ndarray]:
         """Co-execution packet: rows [start, start+size) of global batch."""
         return self.batch_at(step, rows=slice(start, start + size))
 

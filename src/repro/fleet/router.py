@@ -142,7 +142,7 @@ class FleetRouter:
             out.append(Placed(request=r, replica=None))
         for r in admitted:
             idx = self.placement.place(r, now, self.states)
-            if idx is None:                # placement-shed (no feasible replica)
+            if idx is None:        # placement-shed (no feasible replica)
                 r.shed = True
                 self.shed.append(r)
                 out.append(Placed(request=r, replica=None))

@@ -61,7 +61,7 @@ def selective_scan(a, b, C, *, chunk: int = 64, tile_d: int = 512,
     assert S % chunk == 0 and di % tile_d == 0, (S, chunk, di, tile_d)
     kernel = functools.partial(_scan_kernel, chunk=chunk, tile_d=tile_d,
                                ds=ds)
-    # layouts: a,b -> (B, di_tiles... ) keep (B, S, di, ds); block over S and di
+    # layouts: a,b -> (B, di_tiles...) keep (B, S, di, ds); block S, di
     y, h = pl.pallas_call(
         kernel,
         grid=(B, di // tile_d, S // chunk),
@@ -73,7 +73,8 @@ def selective_scan(a, b, C, *, chunk: int = 64, tile_d: int = 512,
             pl.BlockSpec((1, chunk, ds), lambda bi, di_, jc: (bi, jc, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, chunk, tile_d), lambda bi, di_, jc: (bi, jc, di_)),
+            pl.BlockSpec((1, chunk, tile_d),
+                         lambda bi, di_, jc: (bi, jc, di_)),
             pl.BlockSpec((1, tile_d, ds), lambda bi, di_, jc: (bi, di_, 0)),
         ],
         out_shape=[

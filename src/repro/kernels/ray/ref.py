@@ -24,7 +24,8 @@ def make_scene(which: int, n_spheres: int = 32, seed: int = 7):
         radii = rng.uniform(0.4, 1.2, n_spheres).astype(np.float32)
     else:
         # scene 2: clustered spheres -> strongly irregular ray cost
-        centers = (rng.standard_normal((n_spheres, 3)) * 1.5).astype(np.float32)
+        centers = (rng.standard_normal((n_spheres, 3)) * 1.5).astype(
+            np.float32)
         centers[:, 2] = 8.0 + rng.standard_normal(n_spheres) * 0.8
         radii = rng.uniform(0.2, 2.2, n_spheres).astype(np.float32)
     colors = rng.uniform(0.2, 1.0, (n_spheres, 3)).astype(np.float32)

@@ -14,7 +14,8 @@ import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs import ARCH_IDS, SHAPES, get_config, shapes_for  # noqa: E402
+from repro.configs import (ARCH_IDS, SHAPES, get_config,  # noqa: E402
+                           shapes_for)
 from repro.launch import hlo_analysis, hlo_cost  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch import specs as SP  # noqa: E402
@@ -96,7 +97,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         jfn = jax.jit(fn, in_shardings=(p_sh, t_sh, c_sh, t_sh),
                       out_shardings=(None, c_sh), donate_argnums=(2,))
         with mesh:
-            lowered = jfn.lower(params_abs, ins["token"], cache_abs, ins["pos"])
+            lowered = jfn.lower(params_abs, ins["token"], cache_abs,
+                                ins["pos"])
     else:
         raise ValueError(shape.kind)
 
@@ -195,20 +197,23 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
-    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--set", action="append", dest="overrides",
                     help="cfg override key=value (repeatable); e.g. "
-                         "--set remat_policy=dots --set moe.capacity_factor=1.0")
+                         "--set remat_policy=dots "
+                         "--set moe.capacity_factor=1.0")
     ap.add_argument("--tag", default="",
                     help="artifact suffix for perf iterations")
     args = ap.parse_args()
 
     cells = cell_list() if args.all else [(args.arch, args.shape)]
-    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
     os.makedirs(args.out, exist_ok=True)
     overrides = _parse_overrides(args.overrides)
     failures = 0
@@ -216,7 +221,8 @@ def main():
         for mp in meshes:
             mesh_tag = "2x16x16" if mp else "16x16"
             suffix = f"__{args.tag}" if args.tag else ""
-            fp = os.path.join(args.out, f"{arch}__{shape}__{mesh_tag}{suffix}.json")
+            fp = os.path.join(
+                args.out, f"{arch}__{shape}__{mesh_tag}{suffix}.json")
             if os.path.exists(fp) and not args.force:
                 print(f"[skip] {fp}")
                 continue
@@ -230,10 +236,11 @@ def main():
                 rec["tag"] = args.tag
                 with open(fp, "w") as f:
                     json.dump(rec, f, indent=1)
+                wire = rec["collective_wire_bytes_per_device"]
+                temp = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
                 print(f"  ok: compile={rec['compile_s']}s "
                       f"flops/dev={rec['flops_per_device']:.3e} "
-                      f"wire/dev={rec['collective_wire_bytes_per_device']:.3e} "
-                      f"temp={rec['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB",
+                      f"wire/dev={wire:.3e} temp={temp:.2f}GiB",
                       flush=True)
             except Exception:
                 failures += 1

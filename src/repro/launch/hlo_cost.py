@@ -154,7 +154,8 @@ def parse_module(text: str) -> Dict[str, Computation]:
     cur: Optional[Computation] = None
     for line in text.splitlines():
         if cur is None:
-            m = _COMP_HDR.match(line.strip()) if ("{" in line and "->" in line) else None
+            m = (_COMP_HDR.match(line.strip())
+                 if ("{" in line and "->" in line) else None)
             if m:
                 cur = Computation(name=m.group(2))
             continue
@@ -334,7 +335,8 @@ class HloCost:
                     out.flops += fl
                     out.dot_flops += df
                     out.transcendentals += tr
-                    out.traffic_bytes += self._fusion_traffic(comp, ins, callee)
+                    out.traffic_bytes += self._fusion_traffic(
+                        comp, ins, callee)
                     # collectives never appear inside fusions
             elif ins.op in ("call", "custom-call", "conditional"):
                 cm = _CALLS.search(ins.rest)
@@ -366,7 +368,8 @@ class HloCost:
                     gl = _GROUPS_LIST.search(ins.rest)
                     group = len(gl.group(1).split(",")) if gl else 2
                 s = out.collectives.setdefault(
-                    base, {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0})
+                    base, {"count": 0.0, "result_bytes": 0.0,
+                           "wire_bytes": 0.0})
                 s["count"] += 1
                 s["result_bytes"] += ob
                 s["wire_bytes"] += _wire_bytes(base, ob, group)
@@ -380,7 +383,8 @@ class HloCost:
             elif ins.op in ("copy", "transpose", "reshape", "broadcast",
                             "concatenate", "pad", "slice", "reverse",
                             "reduce", "sort", "scatter", "select-and-scatter",
-                            "reduce-window", "iota", "rng", "rng-bit-generator",
+                            "reduce-window", "iota", "rng",
+                            "rng-bit-generator",
                             "convert", "select") or ins.op in _ELEMENTWISE \
                     or ins.op in _TRANSCENDENTAL:
                 tb = _type_bytes(ins.type) + sum(
@@ -391,7 +395,8 @@ class HloCost:
                 elif ins.op in _TRANSCENDENTAL:
                     out.transcendentals += _type_elems(ins.type)
                 elif ins.op == "reduce" and ins.operands:
-                    out.flops += _type_elems(comp.table.get(ins.operands[0], ""))
+                    out.flops += _type_elems(
+                        comp.table.get(ins.operands[0], ""))
         self._memo[comp_name] = out
         return out
 

@@ -40,14 +40,15 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     raise ValueError(shape.kind)
 
 
-def batch_logical_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Tuple]:
+def batch_logical_axes(cfg: ModelConfig,
+                       shape: ShapeConfig) -> Dict[str, Tuple]:
+    n = 3 if cfg.frontend == "encodec_stub" else 2
     if shape.kind in ("train", "prefill"):
-        ax = {"tokens": ("batch", "seq", None)[: 3 if cfg.frontend == "encodec_stub" else 2]}
+        ax = {"tokens": ("batch", "seq", None)[:n]}
         if cfg.frontend == "vit_stub":
             ax["patches"] = ("batch", None, None)
         return ax
-    return {"token": ("batch", None, None)[: 3 if cfg.frontend == "encodec_stub" else 2],
-            "pos": ()}
+    return {"token": ("batch", None, None)[:n], "pos": ()}
 
 
 def abstract_params(cfg: ModelConfig):

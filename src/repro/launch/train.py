@@ -74,7 +74,8 @@ def main(argv=None) -> int:
 
     start_step = 0
     ck = CK.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
-    if args.resume and args.ckpt_dir and CK.latest_step(args.ckpt_dir) is not None:
+    if (args.resume and args.ckpt_dir
+            and CK.latest_step(args.ckpt_dir) is not None):
         state, start_step = CK.restore(state, args.ckpt_dir)
         state = jax.tree.map(jax.numpy.asarray, state)
         print(f"resumed from step {start_step}")
@@ -89,7 +90,8 @@ def main(argv=None) -> int:
             if step % args.log_every == 0:
                 rows = " ".join(f"{k}:{v}" for k, v in rep.device_rows.items())
                 print(f"step {step:5d} loss={rep.loss:.4f} "
-                      f"t={rep.step_time_s*1e3:.0f}ms balance={rep.balance:.2f} "
+                      f"t={rep.step_time_s*1e3:.0f}ms "
+                      f"balance={rep.balance:.2f} "
                       f"packets={rep.packets} rows[{rows}]")
             if ck and step and step % args.ckpt_every == 0:
                 ck.save(state, step)

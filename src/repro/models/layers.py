@@ -55,7 +55,8 @@ def rope_cos_sin(positions, dim, theta, dtype=jnp.float32):
 
 
 def apply_rope(x, cos, sin):
-    """x: (..., S, H, D); cos/sin: (S?, D/2) broadcastable over leading dims."""
+    """x: (..., S, H, D); cos/sin: (S?, D/2) broadcastable over leading
+    dims."""
     d2 = x.shape[-1] // 2
     x1, x2 = x[..., :d2], x[..., d2:]
     # cos/sin: (S, d2) -> (S, 1, d2) to broadcast over heads
@@ -168,13 +169,15 @@ def cached_decode_attention(q, k_cache, v_cache, pos):
 # ---------------------------------------------------------------------------
 
 def gqa_init(cfg: ModelConfig, key, dtype) -> Tuple[Params, Axes]:
-    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    d, H, KH, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim)
     ks = jax.random.split(key, 4)
     p = {
         "wq": _dense_init(ks[0], (d, H, hd), dtype),
         "wk": _dense_init(ks[1], (d, KH, hd), dtype),
         "wv": _dense_init(ks[2], (d, KH, hd), dtype),
-        "wo": _dense_init(ks[3], (H, hd, d), dtype, scale=1.0 / math.sqrt(H * hd)),
+        "wo": _dense_init(ks[3], (H, hd, d), dtype,
+                          scale=1.0 / math.sqrt(H * hd)),
     }
     a = {
         "wq": ("d_model", "heads", None),
@@ -209,10 +212,10 @@ def gqa_apply(cfg: ModelConfig, p: Params, x, positions, *, res=None,
     new_cache = None
     if cache is not None and pos is not None:
         # decode: insert the new k/v at `pos`, attend over the cache
-        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, pos, 0, 0))
-        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, pos, 0, 0))
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
         out = cached_decode_attention(q, kc, vc, pos)
         new_cache = {"k": kc, "v": vc}
     else:
@@ -246,7 +249,8 @@ def mla_init(cfg: ModelConfig, key, dtype) -> Tuple[Params, Axes]:
     ks = jax.random.split(key, 4)
     p = {
         "wq": _dense_init(ks[0], (d, H, qk_dim), dtype),
-        "wkv_a": _dense_init(ks[1], (d, m.kv_lora_rank + m.rope_head_dim), dtype),
+        "wkv_a": _dense_init(ks[1], (d, m.kv_lora_rank + m.rope_head_dim),
+                             dtype),
         "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
         "wkv_b": _dense_init(ks[2], (m.kv_lora_rank, H,
                                      m.nope_head_dim + m.v_head_dim), dtype),
@@ -276,7 +280,8 @@ def mla_apply(cfg: ModelConfig, p: Params, x, positions, *, res=None,
     ckv = rmsnorm(ckv, p["kv_norm"], cfg.norm_eps)
     cos, sin = rope_cos_sin(positions, rope_d, cfg.rope_theta)
     q_rope = apply_rope(q_rope, cos, sin)
-    k_rope = apply_rope(k_rope_flat[..., None, :], cos, sin)[..., 0, :]  # (B,S,rd)
+    # (B, S, rope_d)
+    k_rope = apply_rope(k_rope_flat[..., None, :], cos, sin)[..., 0, :]
 
     if cache is not None and pos is not None and S == 1:
         # --- absorbed decode: never expand the per-token K/V ---
@@ -310,7 +315,8 @@ def mla_apply(cfg: ModelConfig, p: Params, x, positions, *, res=None,
         kv = jnp.einsum("bsr,rhk->bshk", ckv, p["wkv_b"])
         k_nope, v = kv[..., :nope], kv[..., nope:]
         k = jnp.concatenate(
-            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))],
+            [k_nope,
+             jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))],
             axis=-1)
         qq = jnp.concatenate([q_nope, q_rope], axis=-1)
         qq = constrain(qq, res, ("batch", "seq", "heads", None))
@@ -514,7 +520,8 @@ def mamba_init(cfg: ModelConfig, key, dtype) -> Tuple[Params, Axes]:
     A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
     p = {
         "in_proj": _dense_init(ks[0], (d, 2 * di), dtype),
-        "conv_w": _dense_init(ks[1], (dc, di), dtype, scale=1.0 / math.sqrt(dc)),
+        "conv_w": _dense_init(ks[1], (dc, di), dtype,
+                              scale=1.0 / math.sqrt(dc)),
         "conv_b": jnp.zeros((di,), dtype),
         "x_proj": _dense_init(ks[2], (di, dtr + 2 * ds), dtype),
         "dt_proj": _dense_init(ks[3], (dtr, di), dtype),
@@ -608,7 +615,8 @@ def mamba_apply(cfg: ModelConfig, p: Params, x, *, res=None,
         y = jnp.einsum("bds,bs->bd", h, Cmat[:, 0])[:, None, :]
         new_h = h
     else:
-        h0 = cache["h"] if cache is not None else jnp.zeros((B, di, ds), jnp.float32)
+        h0 = (cache["h"] if cache is not None
+              else jnp.zeros((B, di, ds), jnp.float32))
         y, new_h = _ssm_scan_chunked(a, b, Cmat, h0, cfg.scan_chunk)
     y = y.astype(x.dtype) + xc * p["D"].astype(x.dtype)
     y = y * jax.nn.silu(z)

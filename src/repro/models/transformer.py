@@ -59,8 +59,8 @@ def _block_init(cfg: ModelConfig, block_start: int, key, dtype):
     P = cfg.block_period
     p, a = {}, {}
     for i in range(P):
-        p[f"sub{i}"], a[f"sub{i}"] = _layer_init(cfg, block_start + i,
-                                                 jax.random.fold_in(key, i), dtype)
+        p[f"sub{i}"], a[f"sub{i}"] = _layer_init(
+            cfg, block_start + i, jax.random.fold_in(key, i), dtype)
     return p, a
 
 
@@ -328,7 +328,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
     def layer_cache(layer_idx):
         mix = cfg.mixer_kind(layer_idx)
         if mix == "attn":
-            sub = L.mla_cache_init if cfg.attn_kind == "mla" else L.gqa_cache_init
+            sub = (L.mla_cache_init if cfg.attn_kind == "mla"
+                   else L.gqa_cache_init)
             c, a = sub(cfg, batch, max_seq, dtype)
         else:
             c, a = L.mamba_cache_init(cfg, batch, dtype)

@@ -35,7 +35,8 @@ class TrainState(NamedTuple):
 def lr_at(opt: OptConfig, step):
     warm = jnp.minimum(step / jnp.maximum(opt.warmup_steps, 1), 1.0)
     t = jnp.clip((step - opt.warmup_steps)
-                 / jnp.maximum(opt.total_steps - opt.warmup_steps, 1), 0.0, 1.0)
+                 / jnp.maximum(opt.total_steps - opt.warmup_steps, 1),
+                 0.0, 1.0)
     cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
     frac = opt.min_lr_frac + (1 - opt.min_lr_frac) * cos
     return opt.lr * warm * frac
@@ -57,7 +58,8 @@ def global_norm(tree):
                         for x in jax.tree.leaves(tree)))
 
 
-def apply_updates(state: TrainState, grads, opt: OptConfig) -> Tuple[TrainState, Dict]:
+def apply_updates(state: TrainState, grads,
+                  opt: OptConfig) -> Tuple[TrainState, Dict]:
     b1, b2 = opt.betas
     step = state.step + 1
     gnorm = global_norm(grads)
@@ -81,7 +83,8 @@ def apply_updates(state: TrainState, grads, opt: OptConfig) -> Tuple[TrainState,
     flat_g = treedef.flatten_up_to(grads)
     flat_mu = treedef.flatten_up_to(state.mu)
     flat_nu = treedef.flatten_up_to(state.nu)
-    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
     new_params = treedef.unflatten([o[0] for o in out])
     new_mu = treedef.unflatten([o[1] for o in out])
     new_nu = treedef.unflatten([o[2] for o in out])

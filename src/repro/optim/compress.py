@@ -27,7 +27,8 @@ import jax.numpy as jnp
 
 
 def _q_leaf(g, err):
-    g32 = g.astype(jnp.float32) + (err.astype(jnp.float32) if err is not None else 0.0)
+    g32 = g.astype(jnp.float32) + (err.astype(jnp.float32)
+                                   if err is not None else 0.0)
     scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
     q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
     deq = q.astype(jnp.float32) * scale

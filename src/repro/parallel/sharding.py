@@ -48,7 +48,7 @@ DEFAULT_RULES: Rules = {
     "d_ff":     [("model",)],
     "d_inner":  [("model",)],
     "vocab":    [("model",)],
-    "kv_seq":   [("model",)],       # GQA caches: few kv heads -> shard time axis
+    "kv_seq":   [("model",)],       # GQA caches: few kv heads -> shard time
     "seq":      [("data",)],        # SP once batch can't use it (e.g. batch=1)
     "capacity": [("pod", "data"), ("data",)],  # MoE (E,C,d) buffers
     "d_model":  [],                 # replicated by default (see FSDP below)
@@ -85,7 +85,8 @@ class ShardingResolver:
         assert n == len(shape), (logical, shape)
         assign: List[Optional[Tuple[str, ...]]] = [None] * n
         used: set = set()
-        order = sorted(range(n), key=lambda i: _PRIORITY.get(logical[i] or "", 99))
+        order = sorted(range(n),
+                       key=lambda i: _PRIORITY.get(logical[i] or "", 99))
         for i in order:
             name = logical[i]
             if name is None:
@@ -102,7 +103,8 @@ class ShardingResolver:
                 break
         if param and self.fsdp:
             self._apply_fsdp(logical, shape, assign, used, ms)
-        return P(*[a if a is None else (a[0] if len(a) == 1 else a) for a in assign])
+        return P(*[a if a is None else (a[0] if len(a) == 1 else a)
+                   for a in assign])
 
     def _apply_fsdp(self, logical, shape, assign, used, ms) -> None:
         # Shard the largest eligible unsharded dim over the data axes.
@@ -121,7 +123,8 @@ class ShardingResolver:
                 return
 
     # ------------------------------------------------------------------
-    def sharding(self, logical, shape, *, param: bool = False) -> NamedSharding:
+    def sharding(self, logical, shape, *,
+                 param: bool = False) -> NamedSharding:
         return NamedSharding(self.mesh, self.spec(logical, shape, param=param))
 
     def tree_specs(self, logical_tree, shape_tree, *, param: bool = False):
@@ -139,8 +142,10 @@ class ShardingResolver:
                             is_leaf=lambda x: isinstance(x, P))
 
 
-def constrain(x, resolver: Optional[ShardingResolver], logical: Tuple[Optional[str], ...]):
-    """with_sharding_constraint via the resolver (no-op when resolver is None)."""
+def constrain(x, resolver: Optional[ShardingResolver],
+              logical: Tuple[Optional[str], ...]):
+    """with_sharding_constraint via the resolver (no-op when resolver
+    is None)."""
     if resolver is None:
         return x
     return jax.lax.with_sharding_constraint(
