@@ -8,7 +8,9 @@ deterministic given a seed); the baseline is the fastest single device
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+import statistics
+import time
+from typing import Callable, Dict, Hashable, List, Sequence
 
 from repro.configs.paper_suite import (BENCHES, SCHED_CONFIGS, dispatch_for,
                                        sim_devices)
@@ -16,6 +18,48 @@ from repro.core import metrics as M
 from repro.core.simulate import SimConfig, simulate, single_device_time
 
 N_RUNS = 15
+
+
+def interleaved_medians(labels: Sequence[Hashable],
+                        run: Callable[[Hashable], object],
+                        rounds: int, *,
+                        windows: int = 1) -> Dict[Hashable, object]:
+    """Drift-cancelling timing protocol shared by the threaded benchmarks.
+
+    This host shows ~25% throughput drift over a benchmark's lifetime, so
+    configurations must be interleaved (never timed back-to-back in blocks)
+    and the visit order must alternate each round so no label systematically
+    runs first on a warm (or throttled) machine.
+
+    ``run(label)`` is invoked once per (round, label) and timed with
+    ``time.perf_counter``; callers that need per-run observations (waits,
+    packet counts, exactness checks) record them inside the closure.
+
+    With ``windows == 1`` returns ``{label: median_seconds}``.  With
+    ``windows == 2`` the rounds are split into two halves and the result is
+    ``{label: (median_first_half, median_second_half)}`` — callers compare a
+    label across windows and score it by its better half, which bounds the
+    impact of a mid-benchmark frequency shift.
+    """
+    if windows not in (1, 2):
+        raise ValueError(f"windows must be 1 or 2, got {windows}")
+    if rounds < windows:
+        raise ValueError(f"need >= {windows} rounds, got {rounds}")
+    labels = list(labels)
+    times: Dict[Hashable, List[List[float]]] = {
+        lb: [[] for _ in range(windows)] for lb in labels}
+    for rnd in range(rounds):
+        win = 0 if windows == 1 or rnd < (rounds + 1) // 2 else 1
+        order = labels if rnd % 2 == 0 else labels[::-1]
+        for lb in order:
+            t0 = time.perf_counter()
+            run(lb)
+            times[lb][win].append(time.perf_counter() - t0)
+    med = {lb: tuple(statistics.median(w) for w in ws)
+           for lb, ws in times.items()}
+    if windows == 1:
+        return {lb: m[0] for lb, m in med.items()}
+    return med
 
 
 def run_bench_matrix(*, opt_init: bool = True, opt_buffers: bool = True,

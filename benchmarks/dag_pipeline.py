@@ -42,12 +42,12 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import statistics
 import tempfile
 import time
 
 import numpy as np
 
+from benchmarks import common
 from repro.api import EngineSession, RunJournal, resume_run
 from repro.core.device import DeviceGroup
 from repro.core.runtime import Program
@@ -197,19 +197,14 @@ def threaded_sweep(batches, width, base_h, big_factor, packets_per_node,
                            name=f"dag{n_images}") as session:
             for mode in ("levels", "deps"):  # warm-up: compile + settle
                 run_graph(session, graph, mode)
-            times = {"deps": ([], []), "levels": ([], [])}
-            for rnd in range(rounds):
-                win = 0 if rnd < (rounds + 1) // 2 else 1
-                order = (("deps", "levels") if rnd % 2 == 0
-                         else ("levels", "deps"))
-                for mode in order:
-                    t0 = time.perf_counter()
-                    outs = run_graph(session, graph, mode)
-                    times[mode][win].append(time.perf_counter() - t0)
-                    exact = exact and all(
-                        np.array_equal(o, r) for o, r in zip(outs, refs))
-        med = {m: [statistics.median(w) for w in ws]
-               for m, ws in times.items()}
+            def timed(mode):
+                nonlocal exact
+                outs = run_graph(session, graph, mode)
+                exact = exact and all(
+                    np.array_equal(o, r) for o, r in zip(outs, refs))
+
+            med = common.interleaved_medians(
+                ("deps", "levels"), timed, rounds, windows=2)
         gains = [100 * (1 - med["deps"][w] / med["levels"][w])
                  for w in (0, 1)]
         best_w = max((0, 1), key=lambda w: gains[w])
@@ -358,8 +353,6 @@ def main(argv=None) -> int:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")
-
-    from benchmarks import common
 
     print(common.csv_line(
         "dag_pipeline",

@@ -15,6 +15,7 @@ own scale/roofline benches.  Prints ``name,us_per_call,derived`` CSV lines
   dag_pipeline  dependency-aware DAG dispatch vs level barriers + resume
   fleet_slo    deadline-aware fleet routing + elastic autoscaling SLO gates
   energy_pareto  joule/makespan frontier of the energy-capped scheduler
+  autotune_gain  calibrated autotuner vs hand-picked constants + cache reuse
   scale1000    1024-group fleet scheduling (beyond paper)
   roofline     three-term roofline over the dry-run artifacts
 """
@@ -133,7 +134,8 @@ def main() -> None:
                      "fig5_param_sweep", "fig6_inflection",
                      "real_engine", "session_reuse", "offload_modes",
                      "transfer_overlap", "sched_overhead", "dag_pipeline",
-                     "fleet_slo", "energy_pareto", "scale1000", "roofline"):
+                     "fleet_slo", "energy_pareto", "autotune_gain",
+                     "scale1000", "roofline"):
         print(f"\n==== {mod_name} ====", flush=True)
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
         try:

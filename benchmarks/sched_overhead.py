@@ -47,6 +47,7 @@ import time
 
 import numpy as np
 
+from benchmarks import common
 from repro.api import BufferPolicy, EngineSession, OffloadMode
 from repro.core import programs as P
 from repro.core.device import DeviceGroup
@@ -111,20 +112,17 @@ def threaded_sweep(kernel, prog_kw, packet_counts, rounds):
             # hguided compile storm poisons one window's medians, not
             # both — a kernel is scored by its BETTER window, while a
             # real regression stays negative in both
-            times = {name: ([], []) for name, _ in MODES}
             waits = {name: [] for name, _ in MODES}
             pkts = {name: 0 for name, _ in MODES}
-            for rnd in range(rounds):
-                win = 0 if rnd < (rounds + 1) // 2 else 1
-                order = MODES if rnd % 2 == 0 else MODES[::-1]
-                for name, mode_kw in order:
-                    t0 = time.perf_counter()
-                    r = run(mode_kw, n_packets)
-                    times[name][win].append(time.perf_counter() - t0)
-                    waits[name].append(sum(r.sched_wait_s))
-                    pkts[name] = len(r.packets)
-            med = {n: [statistics.median(w) for w in ws]
-                   for n, ws in times.items()}
+            by_name = dict(MODES)
+
+            def timed(name):
+                r = run(by_name[name], n_packets)
+                waits[name].append(sum(r.sched_wait_s))
+                pkts[name] = len(r.packets)
+
+            med = common.interleaved_medians(
+                [name for name, _ in MODES], timed, rounds, windows=2)
             gains = {n: [100 * (1 - med[n][w] / med["locked"][w])
                          for w in (0, 1)]
                      for n in ("leased", "steal")}
@@ -309,8 +307,6 @@ def main(argv=None) -> int:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")
-
-    from benchmarks import common
 
     print(common.csv_line(
         "sched_overhead",

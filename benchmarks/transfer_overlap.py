@@ -33,10 +33,11 @@ from __future__ import annotations
 
 import argparse
 import json
-import statistics
 import time
 
 import numpy as np
+
+from benchmarks import common
 
 from repro.api import BufferPolicy, EngineSession, OffloadMode, Region
 from repro.core import programs as P
@@ -109,14 +110,10 @@ def threaded_sweep(kernel, prog_kw, row_frac, packet_counts, rounds):
                     r.output, ref_roi, rtol=1e-5, atol=1e-5
                 )
 
-            times = {name: [] for name, _ in POLICIES}
-            for rnd in range(rounds):
-                order = POLICIES if rnd % 2 == 0 else POLICIES[::-1]
-                for name, policy in order:
-                    t0 = time.perf_counter()
-                    run(policy)
-                    times[name].append(time.perf_counter() - t0)
-            med = {name: statistics.median(ts) for name, ts in times.items()}
+            by_name = dict(POLICIES)
+            med = common.interleaved_medians(
+                [name for name, _ in POLICIES],
+                lambda name: run(by_name[name]), rounds)
             points.append({
                 "n_packets": n_packets,
                 "pooled_ms": med["pooled"] * 1e3,
@@ -267,8 +264,6 @@ def main(argv=None) -> int:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")
-
-    from benchmarks import common
 
     print(
         common.csv_line(

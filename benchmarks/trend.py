@@ -3,8 +3,8 @@
 CI's ``bench-trend`` job runs ``session_reuse.py``, ``offload_modes.py
 --smoke``, ``transfer_overlap.py --smoke``, ``sched_overhead.py
 --smoke``, ``dag_pipeline.py --smoke``, ``fleet_slo.py --smoke``,
-``energy_pareto.py --smoke`` and ``tenant_fairness.py --smoke`` with
-``--json``, then calls this script to
+``energy_pareto.py --smoke``, ``tenant_fairness.py --smoke`` and
+``autotune_gain.py --smoke`` with ``--json``, then calls this script to
 (a) merge the result files into one ``BENCH_PR.json`` artifact and
 (b) fail the job if any **headline ratio** regresses more than
 ``--tolerance`` (default 10 %) below the committed
@@ -36,6 +36,11 @@ entry.  All headline ratios are higher-is-better:
 * ``tenant_fairness_min_index``      — worst per-scheduler fair-share
   index of three 2:1:1-weighted tenants on a shared fleet (1.0 = exact
   proportional shares at the saturation snapshot; fraction in [0, 1]).
+* ``autotune_min_gain_pct``          — min-over-kernels gain of the
+  calibrated autotuner's configuration over the hand-picked defaults
+  (dynamic ``n_packets=128``, stock lease constants); the benchmark's
+  own ``ok`` additionally requires warm cache reuse (zero re-measures,
+  identical config) and bit-exact tuned output.
 
 Baseline values are committed *derated* from locally measured numbers so
 the gate trips on real regressions, not container noise.
@@ -45,6 +50,7 @@ Usage:
       --transfer-overlap to.json --sched-overhead so.json
       --dag-pipeline dag.json --fleet-slo fleet.json
       --energy-pareto energy.json --tenant-fairness tenant.json
+      --autotune-gain autotune.json
       [--baseline benchmarks/baseline.json]
       [--out BENCH_PR.json] [--tolerance 0.10]
 """
@@ -75,6 +81,8 @@ GATES = [
      lambda d: d["min_dominance"]),
     ("--tenant-fairness", "tenant_fairness", "tenant_fairness_min_index",
      lambda d: d["min_index"]),
+    ("--autotune-gain", "autotune_gain", "autotune_min_gain_pct",
+     lambda d: d["min_gain_pct"]),
 ]
 
 

@@ -84,7 +84,7 @@ class EngineSession:
     """A long-lived co-execution session over an elastic device fleet."""
 
     def __init__(self, devices: Optional[Sequence[DeviceGroup]] = None, *,
-                 scheduler: str = "hguided_opt",
+                 scheduler: Optional[str] = None,
                  scheduler_kwargs: Optional[Dict] = None,
                  buffer_policy: BufferPolicy = BufferPolicy.REGISTERED,
                  device_policy: Optional[DevicePolicy] = None,
@@ -98,8 +98,12 @@ class EngineSession:
                  max_inflight: int = 1,
                  arbiter: Optional[FleetArbiter] = None,
                  tenant: Optional[TenantConfig] = None,
+                 lease_overhead_s: Optional[float] = None,
+                 lease_overhead_frac: Optional[float] = None,
+                 lease_k_max: Optional[int] = None,
+                 async_threshold_bytes: Optional[int] = None,
+                 tuned=None,
                  name: str = "session"):
-        scheduler_spec(scheduler)            # fail fast on unknown names
         if dispatch not in ("leased", "per_packet"):
             raise ValueError(f"dispatch must be 'leased' or 'per_packet', "
                              f"got {dispatch!r}")
@@ -121,8 +125,39 @@ class EngineSession:
             self._devices: List[DeviceGroup] = list(arbiter.devices)
         else:
             self._devices = self.device_policy.resolve(devices)
+        # calibrated-constants path: a TunedConfig (passed directly, as a
+        # dict, as a file path, or ``tuned=True`` for a cache lookup by
+        # this fleet's fingerprint) supplies DEFAULTS for the scheduler
+        # choice, the lease growth law, and the transfer crossover —
+        # explicit kwargs always win (repro.tune).
+        self.tuned = None
+        if tuned is not None and tuned is not False:
+            from repro.tune.cache import resolve_tuned
+            self.tuned = resolve_tuned(tuned, devices=self._devices)
+        if self.tuned is not None:
+            t = self.tuned
+            if scheduler is None and t.scheduler:
+                scheduler = t.scheduler
+                if scheduler_kwargs is None and t.scheduler_kwargs:
+                    scheduler_kwargs = dict(t.scheduler_kwargs)
+            if lease_overhead_s is None:
+                lease_overhead_s = t.lease_overhead_s
+            if lease_overhead_frac is None:
+                lease_overhead_frac = t.lease_overhead_frac
+            if lease_k_max is None:
+                lease_k_max = t.lease_k_max
+            if async_threshold_bytes is None:
+                async_threshold_bytes = t.async_threshold_bytes
+        scheduler = scheduler or "hguided_opt"
+        scheduler_spec(scheduler)            # fail fast on unknown names
         self.scheduler = scheduler
         self.scheduler_kwargs = dict(scheduler_kwargs or {})
+        # non-None subset applied onto every run's fresh scheduler instance
+        self.lease_params = {k: v for k, v in (
+            ("lease_overhead_s", lease_overhead_s),
+            ("lease_overhead_frac", lease_overhead_frac),
+            ("lease_k_max", lease_k_max)) if v is not None} or None
+        self.async_threshold_bytes = async_threshold_bytes
         self.buffer_policy = buffer_policy
         self.parallel_init = parallel_init
         self.cache_executables = cache_executables
@@ -652,7 +687,9 @@ class EngineSession:
             journal_key=sub.journal_key,
             progress=self._graph,
             progress_key=sub.handle,
-            tenant=self._tenant)
+            tenant=self._tenant,
+            lease_params=self.lease_params,
+            async_threshold_bytes=self.async_threshold_bytes)
         if self._tenant is not None:
             # run brackets: exclusive tenants fence the fleet here, and
             # the arbiter catches the tenant's virtual time up on

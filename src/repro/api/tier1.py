@@ -19,7 +19,7 @@ from repro.api.session import EngineSession
 
 def coexec(program: Program,
            devices: Optional[Sequence[DeviceGroup]] = None, *,
-           scheduler: str = "hguided_opt",
+           scheduler: Optional[str] = None,
            scheduler_kwargs: Optional[Dict] = None,
            powers: Optional[List[float]] = None,
            buffer_policy: BufferPolicy = BufferPolicy.REGISTERED,
@@ -27,7 +27,8 @@ def coexec(program: Program,
            parallel_init: bool = True,
            init_cost_s: float = 0.0,
            region: Optional[Region] = None,
-           dispatch: str = "leased") -> RunResult:
+           dispatch: str = "leased",
+           tuned=None) -> RunResult:
     """Co-execute ``program`` across ``devices`` and return its RunResult.
 
     ``devices=None`` discovers the fleet via ``device_policy`` (default:
@@ -38,7 +39,10 @@ def coexec(program: Program,
     ``EngineSession`` and use ``register_workload`` + ROI-mode submits.
     ``dispatch`` selects the scheduler hand-off: ``"leased"`` (default,
     lock-amortized packet plans) or ``"per_packet"`` (the classic
-    one-lock-per-packet baseline).
+    one-lock-per-packet baseline).  ``tuned`` accepts a
+    ``repro.tune.TunedConfig`` (or ``True`` for a calibration-cache
+    lookup): autotuned scheduler choice, lease constants, and transfer
+    crossover become the run's defaults; explicit kwargs still win.
     """
     with EngineSession(devices,
                        scheduler=scheduler,
@@ -48,6 +52,7 @@ def coexec(program: Program,
                        parallel_init=parallel_init,
                        init_cost_s=init_cost_s,
                        dispatch=dispatch,
+                       tuned=tuned,
                        name=f"coexec[{program.name}]") as session:
         return session.submit(program, powers=powers,
                               region=region).result()

@@ -531,7 +531,16 @@ class TransferPipeline:
     stamped by its PhaseClock).
     """
 
-    def __init__(self, pool, async_threshold_bytes: int = 256 << 10):
+    # hand-picked crossover for the reference container; sessions inject a
+    # calibrated value (``async_threshold_bytes=`` / ``tuned=``) per host
+    DEFAULT_ASYNC_THRESHOLD_BYTES = 256 << 10
+
+    def __init__(self, pool, async_threshold_bytes: Optional[int] = None):
+        if async_threshold_bytes is None:
+            async_threshold_bytes = self.DEFAULT_ASYNC_THRESHOLD_BYTES
+        if int(async_threshold_bytes) < 0:
+            raise ValueError(f"async_threshold_bytes must be >= 0, "
+                             f"got {async_threshold_bytes}")
         self._pool = pool            # WorkerPool-like: submit(fn) -> Event
         self.async_threshold_bytes = int(async_threshold_bytes)
         self._cv = threading.Condition()

@@ -296,7 +296,9 @@ class _RunContext:
                  journal_key: Optional[str] = None,
                  progress=None,
                  progress_key: Optional[object] = None,
-                 tenant=None):
+                 tenant=None,
+                 lease_params: Optional[Dict] = None,
+                 async_threshold_bytes: Optional[int] = None):
         self.program = program
         self.devices = list(devices)
         if not self.devices:
@@ -340,6 +342,11 @@ class _RunContext:
         # the session owns the fleet (the pre-tenancy fast path, zero
         # overhead: solo runs stay bit-identical).
         self.tenant = tenant
+        # calibrated constants (session kwargs / TunedConfig): lease
+        # growth-law overrides applied onto the fresh scheduler instance,
+        # and the transfer pipeline's inline/async commit crossover
+        self.lease_params = dict(lease_params) if lease_params else None
+        self.async_threshold_bytes = async_threshold_bytes
 
     def _invoke(self, fn: Callable, region: Region) -> Callable:
         """Adapt a packet's absolute row panel to the range-fn contract
@@ -407,7 +414,7 @@ class _RunContext:
         fns: List[Optional[Callable]] = [None] * n
         t0_busy = [d.busy_time for d in self.devices]
         if use_pipeline:
-            pipe = TransferPipeline(self.pool)
+            pipe = TransferPipeline(self.pool, self.async_threshold_bytes)
             pipe.start()
 
         def mark_roi():
@@ -728,6 +735,8 @@ class _RunContext:
             sched = make_scheduler(self.scheduler_name, run_region,
                                    run_region.dims[0].lws, profiles,
                                    **self.scheduler_kwargs)
+            if self.lease_params:
+                sched.set_lease_params(**self.lease_params)
             if self.progress is not None:
                 # graph-wide remaining() now reads this run's live
                 # lease/exact-cover bookkeeping instead of its static G

@@ -233,6 +233,33 @@ class SchedulerBase:
         self.stats = SchedStats()
 
     # -- public ------------------------------------------------------------
+    def set_lease_params(self, *, lease_overhead_s: Optional[float] = None,
+                         lease_overhead_frac: Optional[float] = None,
+                         lease_k_max: Optional[int] = None) -> "SchedulerBase":
+        """Override the lease growth-law constants on THIS instance.
+
+        The class-attribute defaults above are hand-picked for the
+        reference container; sessions (``tuned=`` / lease kwargs) and the
+        simulators inject calibrated values here instead of editing the
+        module.  ``None`` leaves a constant untouched.  Returns ``self``
+        so construction sites can chain."""
+        if lease_overhead_s is not None:
+            if lease_overhead_s <= 0:
+                raise ValueError(f"lease_overhead_s must be > 0, "
+                                 f"got {lease_overhead_s}")
+            self.lease_overhead_s = float(lease_overhead_s)
+        if lease_overhead_frac is not None:
+            if not 0 < lease_overhead_frac <= 1:
+                raise ValueError(f"lease_overhead_frac must be in (0, 1], "
+                                 f"got {lease_overhead_frac}")
+            self.lease_overhead_frac = float(lease_overhead_frac)
+        if lease_k_max is not None:
+            if int(lease_k_max) < 1:
+                raise ValueError(f"lease_k_max must be >= 1, "
+                                 f"got {lease_k_max}")
+            self.lease_k_max = int(lease_k_max)
+        return self
+
     def next_packet(self, device: int) -> Optional[Packet]:
         """Per-packet hand-off: ONE global lock acquisition per packet
         (the paper's atomic queue; the baseline the lease API beats)."""

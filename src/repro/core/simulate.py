@@ -223,6 +223,10 @@ class SimConfig:
     # cost of ONE scheduler lock crossing (contended hand-off / thread
     # wake); None keeps the legacy host_cost_per_packet scale
     sched_overhead_s: Optional[float] = None
+    # lease growth-law overrides (None keeps SchedulerBase defaults) —
+    # the autotuner sweeps these in-sim before confirming on hardware
+    lease_overhead_frac: Optional[float] = None
+    lease_k_max: Optional[int] = None
     seed: int = 0
 
     def __post_init__(self):
@@ -246,6 +250,17 @@ class SimConfig:
             return self.sched_overhead_s
         return self.host_cost_per_packet
 
+    def tune_scheduler(self, sched) -> None:
+        """Apply the leased-dispatch cost model to a fresh scheduler: the
+        adaptive lease law balances lock-crossing cost against packet
+        latency, so it must see the MODELED crossing cost (not the
+        wall-clock class default) plus any swept growth-law constants."""
+        if self.dispatch == "leased":
+            sched.set_lease_params(
+                lease_overhead_s=self.hand_off_cost,
+                lease_overhead_frac=self.lease_overhead_frac,
+                lease_k_max=self.lease_k_max)
+
 
 def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
              cfg: SimConfig) -> RunResult:
@@ -259,11 +274,7 @@ def simulate(total_work: int, lws: int, devices: Sequence[SimDevice],
                 for d in devices]
     sched = make_scheduler(cfg.scheduler, total_work, lws, profiles,
                            **cfg.scheduler_kwargs)
-    if leased:
-        # the adaptive lease law balances lock-crossing cost against
-        # packet latency: feed it the MODELED crossing cost, not the
-        # wall-clock class default
-        sched.lease_overhead_s = hand_off
+    cfg.tune_scheduler(sched)
     n = len(devices)
     busy = [0.0] * n
     finish = [0.0] * n
@@ -483,8 +494,7 @@ def simulate_dag(nodes: Sequence[SimNode], devices: Sequence[SimDevice],
                 sched = make_scheduler(cfg.scheduler, node.total_work,
                                        node.lws, profiles,
                                        **cfg.scheduler_kwargs)
-                if leased:
-                    sched.lease_overhead_s = hand_off
+                cfg.tune_scheduler(sched)
                 scheds[node.name] = sched
                 max_end[node.name] = now
                 started[node.name] = now
@@ -628,8 +638,7 @@ def simulate_multitenant(tenants: Sequence[SimTenant],
     for ten in tenants:
         s = make_scheduler(ten.scheduler or cfg.scheduler, ten.total_work,
                            ten.lws, profiles, **cfg.scheduler_kwargs)
-        if leased:
-            s.lease_overhead_s = hand_off
+        cfg.tune_scheduler(s)
         scheds[ten.name] = s
     vt = {t.name: 0.0 for t in tenants}
     usage = {t.name: 0 for t in tenants}
@@ -972,8 +981,7 @@ def simulate_serving(requests: Sequence, lws: int,
         if order is not None:
             skw.setdefault("order", order)
         sched = make_scheduler(cfg.scheduler, G, lws, profiles, **skw)
-        if leased:
-            sched.lease_overhead_s = hand_off
+        cfg.tune_scheduler(sched)
         if hasattr(sched, "update_slack"):
             sched.update_slack(min(r.deadline for r in admitted) - now)
         done_wg = [0] * len(admitted)

@@ -1,0 +1,289 @@
+"""Autotuner tests: cache durability, fingerprint keying, fit math,
+the search's structural never-worse guarantee, and session plumbing."""
+import json
+import os
+from types import SimpleNamespace
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import EngineSession
+from repro.core.device import DeviceGroup
+from repro.core.membuf import TransferPipeline
+from repro.core.scheduler import DeviceProfile, DynamicScheduler
+from repro.tune import (Calibration, DeviceCalibration, Measurements,
+                        TuneCache, TunedConfig, autotune, calibrate,
+                        crossover_bytes, device_fingerprint, resolve_tuned,
+                        search)
+from repro.tune.calibrate import fit_line
+from repro.tune.search import DEFAULT_N_PACKETS
+
+FLEET = [DeviceGroup("d0", throttle=1.0), DeviceGroup("d1", throttle=2.0)]
+
+
+def make_calibration(throughputs=(1e5, 5e4), overhead_s=1e-4,
+                     sched_overhead_s=2e-4, wake_s=2e-4):
+    return Calibration(
+        kernels={"k": {f"d{i}": DeviceCalibration(tp, overhead_s)
+                       for i, tp in enumerate(throughputs)}},
+        sched_overhead_s=sched_overhead_s, wake_cost_s=wake_s,
+        transfer_base_s=1e-6, transfer_s_per_byte=1e-10)
+
+
+def make_config(**kw):
+    base = dict(kernel="k", scheduler="dynamic",
+                scheduler_kwargs={"n_packets": 16}, lws=8,
+                lease_overhead_s=1e-4, lease_overhead_frac=0.05,
+                lease_k_max=32, async_threshold_bytes=1 << 16,
+                predicted_s=0.5, predicted_default_s=1.0)
+    base.update(kw)
+    return TunedConfig(**base)
+
+
+# -- cache roundtrip -------------------------------------------------------
+
+def test_cache_roundtrip(tmp_path):
+    path = tmp_path / "cache.json"
+    cal = make_calibration()
+    cfg = make_config()
+    fp = device_fingerprint(FLEET)
+    cache = TuneCache(path)
+    cache.put_calibration(fp, cal)
+    cache.put_winner(fp, "k", cfg)
+
+    fresh = TuneCache(path)                 # re-read from disk
+    got_cal = fresh.get_calibration(fp)
+    assert got_cal is not None
+    assert got_cal.to_dict() == cal.to_dict()
+    got = fresh.get_winner(fp, "k")
+    assert got == cfg
+    assert fresh.winners(fp) == {"k": cfg}
+
+
+def test_tuned_config_dict_roundtrip():
+    cfg = make_config()
+    assert TunedConfig.from_dict(cfg.to_dict()) == cfg
+    # unknown keys from a newer writer are dropped, not fatal
+    d = cfg.to_dict()
+    d["shiny_new_field"] = 42
+    assert TunedConfig.from_dict(d) == cfg
+
+
+def test_cache_tolerates_corrupt_and_torn_files(tmp_path):
+    fp = device_fingerprint(FLEET)
+    for blob in ("not json at all", '{"version": 1, "entries": {',  # torn
+                 '[1, 2, 3]', '{"version": 99, "entries": {}}',
+                 '{"entries": "nope", "version": 1}'):
+        path = tmp_path / "cache.json"
+        path.write_text(blob)
+        cache = TuneCache(path)
+        assert cache.get_calibration(fp) is None
+        assert cache.get_winner(fp, "k") is None
+        # the next store rewrites the file cleanly
+        cache.put_winner(fp, "k", make_config())
+        assert TuneCache(path).get_winner(fp, "k") == make_config()
+
+
+def test_cache_tolerates_missing_file_and_garbage_entry(tmp_path):
+    path = tmp_path / "nope" / "cache.json"
+    cache = TuneCache(path)                 # parent dir doesn't exist yet
+    fp = device_fingerprint(FLEET)
+    assert cache.get_winner(fp, "k") is None
+    cache.put_winner(fp, "k", make_config())
+    assert os.path.exists(path)
+    # a hand-mangled winner entry degrades to a miss, not a crash
+    raw = json.loads(path.read_text())
+    raw["entries"][fp]["winners"]["k"] = "garbage"
+    path.write_text(json.dumps(raw))
+    assert TuneCache(path).get_winner(fp, "k") is None
+
+
+# -- fingerprint invalidation ----------------------------------------------
+
+def test_fingerprint_order_insensitive_but_fleet_sensitive():
+    fp = device_fingerprint(FLEET)
+    assert fp == device_fingerprint(FLEET[::-1])
+    bigger = FLEET + [DeviceGroup("d2", throttle=4.0)]
+    assert fp != device_fingerprint(bigger)
+    rethrottled = [DeviceGroup("d0", throttle=1.0),
+                   DeviceGroup("d1", throttle=3.0)]
+    assert fp != device_fingerprint(rethrottled)
+
+
+def test_different_fleet_misses_cached_winner(tmp_path):
+    path = tmp_path / "cache.json"
+    cache = TuneCache(path)
+    cache.put_winner(device_fingerprint(FLEET), "k", make_config())
+    other = FLEET + [DeviceGroup("d2", throttle=4.0)]
+    assert cache.get_winner(device_fingerprint(other), "k") is None
+    assert resolve_tuned(cache, devices=other, kernel="k") is None
+
+
+# -- fit + crossover math --------------------------------------------------
+
+def test_fit_line_recovers_synthetic_line():
+    intercept, slope = fit_line({n: 1e-3 + n / 1e5
+                                 for n in (64, 128, 256, 512)})
+    assert intercept == pytest.approx(1e-3, rel=1e-6)
+    assert 1.0 / slope == pytest.approx(1e5, rel=1e-6)
+
+
+def test_crossover_branches():
+    assert crossover_bytes(0.0, 0.0, 1e-4) == 256 << 10   # degenerate fit
+    assert crossover_bytes(1e-3, 1e-9, 1e-4) == 0         # wake always wins
+    assert crossover_bytes(0.0, 1e-9, 1e-4) == 100_000    # intersection
+
+
+def test_calibrate_builds_terms_from_measurements():
+    m = Measurements(
+        kernels={"k": {"d0": {64: 1e-3 + 64 / 1e5, 256: 1e-3 + 256 / 1e5}}},
+        crossing_s=3e-4, wake_s=1e-4,
+        copy_s={1 << 10: 2e-6, 1 << 20: 1e-3}, n_timed_runs=10)
+    cal = calibrate(m)
+    assert cal.sched_overhead_s == pytest.approx(3e-4)
+    assert cal.kernels["k"]["d0"].throughput == pytest.approx(1e5, rel=1e-6)
+    assert cal.kernels["k"]["d0"].overhead_s == pytest.approx(1e-3, rel=1e-6)
+    assert cal.transfer_s_per_byte > 0
+
+
+# -- the search's structural guarantee -------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(tp0=st.floats(1e3, 1e7), ratio=st.floats(1.0, 8.0),
+       overhead=st.floats(0.0, 1e-3), crossing=st.floats(1e-6, 1e-3))
+def test_search_winner_never_worse_than_defaults(tp0, ratio, overhead,
+                                                 crossing):
+    """Whatever the calibration says, the simulated winner is at least as
+    good as the hand-picked defaults — the defaults are in the grid."""
+    cal = make_calibration(throughputs=(tp0, tp0 / ratio),
+                           overhead_s=overhead, sched_overhead_s=crossing,
+                           wake_s=crossing)
+    res = search(cal, "k", total_work=4096, lws=8, seeds=1)
+    assert res.winner.predicted_s <= res.default.predicted_s
+    assert res.default.scheduler_kwargs == {"n_packets": DEFAULT_N_PACKETS}
+    assert res.predicted_gain_pct >= 0.0
+
+
+# -- knob plumbing: scheduler, pipeline, session ---------------------------
+
+def test_set_lease_params_validates_and_applies():
+    sched = DynamicScheduler(1024, 8, [DeviceProfile("d0", 1.0)])
+    out = sched.set_lease_params(lease_overhead_s=1e-3,
+                                 lease_overhead_frac=0.1, lease_k_max=7)
+    assert out is sched
+    assert (sched.lease_overhead_s, sched.lease_overhead_frac,
+            sched.lease_k_max) == (1e-3, 0.1, 7)
+    # None leaves the class default in place
+    sched2 = DynamicScheduler(1024, 8, [DeviceProfile("d0", 1.0)])
+    sched2.set_lease_params(lease_k_max=9)
+    assert sched2.lease_overhead_s == type(sched2).lease_overhead_s
+    assert sched2.lease_k_max == 9
+    for bad in (dict(lease_overhead_s=0.0), dict(lease_overhead_frac=0.0),
+                dict(lease_overhead_frac=1.5), dict(lease_k_max=0)):
+        with pytest.raises(ValueError):
+            DynamicScheduler(1024, 8, [DeviceProfile("d0", 1.0)]
+                             ).set_lease_params(**bad)
+
+
+def test_transfer_pipeline_threshold_param():
+    # the threshold is resolved and validated before the pool is touched
+    assert TransferPipeline(None).async_threshold_bytes == \
+        TransferPipeline.DEFAULT_ASYNC_THRESHOLD_BYTES
+    assert TransferPipeline(None, 4096).async_threshold_bytes == 4096
+    with pytest.raises(ValueError):
+        TransferPipeline(None, -1)
+
+
+def test_session_applies_tuned_config():
+    cfg = make_config()
+    with EngineSession(FLEET, tuned=cfg) as s:
+        assert s.scheduler == "dynamic"
+        assert s.scheduler_kwargs == {"n_packets": 16}
+        assert s.lease_params == cfg.lease_params()
+        assert s.async_threshold_bytes == 1 << 16
+        assert s.tuned is cfg
+
+
+def test_session_explicit_kwargs_beat_tuned():
+    cfg = make_config()
+    with EngineSession(FLEET, scheduler="static", lease_k_max=64,
+                       tuned=cfg) as s:
+        assert s.scheduler == "static"          # user choice wins
+        assert s.scheduler_kwargs == {}         # tuned kwargs not grafted
+        assert s.lease_params["lease_k_max"] == 64
+        assert s.lease_params["lease_overhead_frac"] == 0.05  # still tuned
+    with EngineSession(FLEET) as s:
+        assert s.scheduler == "hguided_opt"     # untuned default unchanged
+        assert s.lease_params is None
+
+
+def test_resolve_tuned_forms(tmp_path):
+    cfg = make_config()
+    assert resolve_tuned(None) is None
+    assert resolve_tuned(False) is None
+    assert resolve_tuned(cfg) is cfg
+    assert resolve_tuned(cfg.to_dict()) == cfg
+    cfg_path = tmp_path / "cfg.json"
+    cfg_path.write_text(json.dumps(cfg.to_dict()))
+    assert resolve_tuned(str(cfg_path)) == cfg
+    cache_path = tmp_path / "cache.json"
+    cache = TuneCache(cache_path)
+    cache.put_winner(device_fingerprint(FLEET), "k", cfg)
+    assert resolve_tuned(str(cache_path), devices=FLEET, kernel="k") == cfg
+    # sole stored winner resolves even without a kernel name
+    assert resolve_tuned(cache, devices=FLEET) == cfg
+    with pytest.raises(TypeError):
+        resolve_tuned(12345)
+
+
+# -- the closed loop, with injected measurements ---------------------------
+
+def fake_measure(devices, programs, rounds=7, **_):
+    m = Measurements(crossing_s=2e-4, wake_s=1e-4,
+                     copy_s={1 << 10: 2e-6, 1 << 20: 1e-3})
+    for kernel in programs:
+        m.kernels[kernel] = {
+            d.name: {64: 1e-3 + 64 / (1e5 / d.throttle),
+                     256: 1e-3 + 256 / (1e5 / d.throttle)}
+            for d in devices}
+        m.n_timed_runs += 2 * len(devices) * rounds
+    return m
+
+
+def test_autotune_cache_flow(tmp_path):
+    path = tmp_path / "cache.json"
+    progs = {"k": SimpleNamespace(total_work=4096, lws=8)}
+    rep1 = autotune(FLEET, progs, "k", cache=TuneCache(path),
+                    measure_fn=fake_measure)
+    assert rep1.microbenches_run > 0 and not rep1.cache_hit_winner
+    assert rep1.config.predicted_s <= rep1.config.predicted_default_s
+
+    rep2 = autotune(FLEET, progs, "k", cache=TuneCache(path),
+                    measure_fn=fake_measure)
+    assert rep2.cache_hit_winner and rep2.microbenches_run == 0
+    assert rep2.config == rep1.config
+
+    # a second kernel on the warm cache reuses the HOST terms but must
+    # measure its own compute fit — and must not evict kernel 1's
+    progs2 = {"k2": SimpleNamespace(total_work=8192, lws=8)}
+    autotune(FLEET, progs2, "k2", cache=TuneCache(path),
+             measure_fn=fake_measure)
+    warm = TuneCache(path)
+    fp = device_fingerprint(FLEET)
+    assert set(warm.get_calibration(fp).kernels) == {"k", "k2"}
+    assert warm.get_winner(fp, "k") == rep1.config
+
+    # corrupting the file forces a clean re-measure, not a crash
+    path.write_text("garbage{")
+    rep3 = autotune(FLEET, progs, "k", cache=TuneCache(path),
+                    measure_fn=fake_measure)
+    assert rep3.microbenches_run > 0 and not rep3.cache_hit_winner
+    assert rep3.config == rep1.config       # same measurements, same answer
+
+
+def test_autotune_unknown_kernel_raises(tmp_path):
+    with pytest.raises(KeyError):
+        autotune(FLEET, {"k": SimpleNamespace(total_work=64, lws=1)},
+                 "other", cache=TuneCache(tmp_path / "c.json"),
+                 measure_fn=fake_measure)
